@@ -1,0 +1,64 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Every benchmark prints CSV rows (name,<fields...>) and returns them as a
+list of dicts so run.py can aggregate.  Sizes are scaled down from the
+paper's datasets to single-CPU budgets; the scale factor is recorded in
+each row (DESIGN.md S7).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GLMTrainer, SolverConfig
+from repro.data import (criteo_like, epsilon_like, higgs_like,
+                        make_dense_classification,
+                        make_sparse_classification)
+
+# reduced-scale stand-ins (paper: criteo 45M x 1M, higgs 11M x 28,
+# epsilon 400k x 2k).  scale = fraction of the original n.
+DATASETS = {
+    "criteo": dict(maker=lambda: criteo_like(n=8192, d=4096),
+                   sparse=True, scale=8192 / 45e6),
+    "higgs": dict(maker=lambda: higgs_like(n=16384),
+                  sparse=False, scale=16384 / 11e6),
+    "epsilon": dict(maker=lambda: epsilon_like(n=4096),
+                    sparse=False, scale=4096 / 400e3),
+}
+
+
+def load(name):
+    d = DATASETS[name]
+    out = d["maker"]()
+    if d["sparse"]:
+        (idx, val), y, dim = out
+        return dict(X=(idx, val), y=y, d=dim, sparse=True,
+                    scale=d["scale"])
+    X, y = out
+    return dict(X=X, y=y, d=X.shape[0], sparse=False, scale=d["scale"])
+
+
+def fit_timed(data, cfg: SolverConfig, *, lam=1e-3, max_epochs=80,
+              tol=1e-3):
+    kw = dict(sparse=True, d=data["d"]) if data["sparse"] else {}
+    tr = GLMTrainer(data["X"], data["y"], objective="logistic", lam=lam,
+                    cfg=cfg, **kw)
+    # warm the jit so timings exclude compilation
+    tr._epoch_fn(tr.alpha, tr.v, jnp.int32(0))
+    t0 = time.perf_counter()
+    res = tr.fit(max_epochs=max_epochs, tol=tol)
+    wall = time.perf_counter() - t0
+    return dict(epochs=res.epochs, converged=res.converged,
+                diverged=res.diverged, gap=res.final_gap, wall_s=wall,
+                s_per_epoch=wall / max(res.epochs, 1))
+
+
+def emit(rows, header):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(f"{r.get(h, ''):.6g}"
+                       if isinstance(r.get(h), float)
+                       else str(r.get(h, "")) for h in header))
+    return rows

@@ -1,0 +1,47 @@
+"""Paper Fig 1: 'wild' multi-threaded SDCA vs thread count, 1 vs 4 nodes.
+
+Reproduces the qualitative claims: (a) dense data — wild degrades /
+fails to converge as lanes grow, worse with more numa nodes (pods);
+(b) sparse data — wild scales fine within one node.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import SolverConfig
+from repro.data import (make_dense_classification,
+                        make_sparse_classification)
+from .common import emit, fit_timed
+
+HEADER = ["bench", "dataset", "pods", "lanes", "epochs", "converged",
+          "diverged", "gap", "wall_s"]
+
+
+def run(quick: bool = False):
+    rows = []
+    n = 8192 if quick else 32768
+    dense = make_dense_classification(n=n, d=100, seed=0)
+    sparse = make_sparse_classification(n=n, d=1000, nnz=10, seed=0)
+    lanes = [1, 4, 16] if quick else [1, 2, 4, 8, 16, 32]
+    for name, data in (("dense", dense), ("sparse", sparse)):
+        if name == "sparse":
+            (idx, val), y, d = data
+            dd = dict(X=(idx, val), y=y, d=d, sparse=True)
+        else:
+            X, y = data
+            dd = dict(X=X, y=y, d=100, sparse=False)
+        for pods in (1, 4):
+            for k in lanes:
+                if pods * k > 64:
+                    continue
+                cfg = SolverConfig(pods=pods, lanes=k, bucket=8,
+                                   partition="dynamic",
+                                   aggregation="wild")
+                r = fit_timed(dd, cfg, max_epochs=40)
+                rows.append(dict(bench="fig1", dataset=name, pods=pods,
+                                 lanes=k, **r))
+    return emit(rows, HEADER)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Paper Fig 2: (a) per-epoch scalability bottleneck ablation;
+(b) effect of the number of static (CoCoA) partitions on convergence.
+
+Fig 2a ablation on TPU terms: 'wild' (shared-vector sum each chunk) vs
+'adding' (one psum-equivalent per epoch) vs no-shuffle (static, no
+permutation work).  Timings are CPU-simulator proxies; the structural
+claim (shared updates and shuffling limit scaling) is what transfers.
+"""
+from __future__ import annotations
+
+from repro.core import SolverConfig
+from repro.data import make_dense_classification
+from .common import emit, fit_timed
+
+HEADER = ["bench", "variant", "lanes", "epochs", "s_per_epoch",
+          "wall_s", "gap", "converged"]
+
+
+def run(quick: bool = False):
+    rows = []
+    n = 8192 if quick else 32768
+    X, y = make_dense_classification(n=n, d=100, seed=1)
+    data = dict(X=X, y=y, d=100, sparse=False)
+    lanes = [1, 4, 16] if quick else [1, 2, 4, 8, 16, 32]
+
+    # (a) per-epoch-time ablations
+    for k in lanes:
+        for variant, cfg in (
+            ("wild_shared", SolverConfig(lanes=k, bucket=8,
+                                         partition="dynamic",
+                                         aggregation="wild", chunks=4)),
+            ("sync_per_epoch", SolverConfig(lanes=k, bucket=8,
+                                            partition="dynamic",
+                                            aggregation="adding")),
+            ("no_shuffle", SolverConfig(lanes=k, bucket=8,
+                                        partition="static",
+                                        aggregation="adding")),
+        ):
+            r = fit_timed(data, cfg, max_epochs=5, tol=0.0)
+            rows.append(dict(bench="fig2a", variant=variant, lanes=k,
+                             **{h: r[h] for h in
+                                ("epochs", "s_per_epoch", "wall_s",
+                                 "gap", "converged")}))
+
+    # (b) static partitions vs convergence (1 partition per lane)
+    for k in ([1, 4, 16] if quick else [1, 2, 4, 8, 16, 32, 64]):
+        cfg = SolverConfig(lanes=k, bucket=8, partition="static")
+        r = fit_timed(data, cfg, max_epochs=120)
+        rows.append(dict(bench="fig2b", variant="static_partitions",
+                         lanes=k,
+                         **{h: r[h] for h in
+                            ("epochs", "s_per_epoch", "wall_s", "gap",
+                             "converged")}))
+    return emit(rows, HEADER)
+
+
+if __name__ == "__main__":
+    run()

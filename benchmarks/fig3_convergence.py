@@ -1,0 +1,42 @@
+"""Paper Fig 3: wild vs domesticated time-to-convergence on the three
+datasets x two 'machines' (2-pod and 4-pod mesh geometries)."""
+from __future__ import annotations
+
+from repro.core import SolverConfig
+from .common import DATASETS, emit, fit_timed, load
+
+HEADER = ["bench", "dataset", "machine", "impl", "lanes", "epochs",
+          "converged", "wall_s", "speedup_vs_wild"]
+
+
+def run(quick: bool = False):
+    rows = []
+    names = ["higgs"] if quick else list(DATASETS)
+    for name in names:
+        data = load(name)
+        for pods, machine in ((2, "2node"), (4, "4node")):
+            lanes = 4
+            wild = fit_timed(data, SolverConfig(
+                pods=1, lanes=pods * lanes, bucket=8,
+                partition="dynamic", aggregation="wild"))
+            dom = fit_timed(data, SolverConfig(
+                pods=pods, lanes=lanes, bucket=8,
+                partition="hierarchical", aggregation="adding"))
+            speed = (wild["wall_s"] / dom["wall_s"]
+                     if dom["converged"] else float("nan"))
+            rows.append(dict(bench="fig3", dataset=name, machine=machine,
+                             impl="wild", lanes=pods * lanes,
+                             epochs=wild["epochs"],
+                             converged=wild["converged"],
+                             wall_s=wild["wall_s"], speedup_vs_wild=1.0))
+            rows.append(dict(bench="fig3", dataset=name, machine=machine,
+                             impl="domesticated", lanes=pods * lanes,
+                             epochs=dom["epochs"],
+                             converged=dom["converged"],
+                             wall_s=dom["wall_s"],
+                             speedup_vs_wild=speed))
+    return emit(rows, HEADER)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Paper Fig 4: strong scaling of per-epoch time with lane count."""
+from __future__ import annotations
+
+from repro.core import SolverConfig
+from .common import DATASETS, emit, fit_timed, load
+
+HEADER = ["bench", "dataset", "lanes", "s_per_epoch", "speedup_vs_1"]
+
+
+def run(quick: bool = False):
+    rows = []
+    names = ["higgs"] if quick else list(DATASETS)
+    lanes = [1, 4, 16] if quick else [1, 2, 4, 8, 16, 32]
+    for name in names:
+        data = load(name)
+        base = None
+        for k in lanes:
+            r = fit_timed(data, SolverConfig(
+                pods=1, lanes=k, bucket=8, partition="dynamic"),
+                max_epochs=4, tol=0.0)
+            if base is None:
+                base = r["s_per_epoch"]
+            rows.append(dict(bench="fig4", dataset=name, lanes=k,
+                             s_per_epoch=r["s_per_epoch"],
+                             speedup_vs_1=base / r["s_per_epoch"]))
+    return emit(rows, HEADER)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,77 @@
+"""Paper Fig 5 ablations: (a) static vs dynamic (vs our alltoall /
+rotation) partitioning, (b) buckets on/off, (c) flat vs hierarchical
+pod scheme."""
+from __future__ import annotations
+
+from repro.core import SolverConfig
+from .common import DATASETS, emit, fit_timed, load
+
+HEADER = ["bench", "dataset", "variant", "epochs", "converged", "wall_s",
+          "gap"]
+
+
+def _row(rows, bench, dataset, variant, r):
+    rows.append(dict(bench=bench, dataset=dataset, variant=variant,
+                     epochs=r["epochs"], converged=r["converged"],
+                     wall_s=r["wall_s"], gap=r["gap"]))
+
+
+def run(quick: bool = False):
+    rows = []
+    names = ["criteo"] if quick else ["criteo", "epsilon", "higgs"]
+    for name in names:
+        data = load(name)
+
+        # (a) partitioning schemes, 16 lanes in one pod
+        for mode in ("static", "dynamic", "alltoall", "rotation"):
+            r = fit_timed(data, SolverConfig(
+                pods=1, lanes=16, bucket=8, partition=mode),
+                max_epochs=120)
+            _row(rows, "fig5a", name, mode, r)
+
+        # (b) buckets on/off (8 lanes, dynamic)
+        for bucket, variant in ((1, "bucket_off"), (8, "bucket_8"),
+                                (16, "bucket_16")):
+            r = fit_timed(data, SolverConfig(
+                pods=1, lanes=8, bucket=bucket, partition="dynamic"),
+                max_epochs=120)
+            _row(rows, "fig5b", name, variant, r)
+
+        # (c) flat (1 pod x 16) vs hierarchical (4 pods x 4)
+        for cfg, variant in (
+            (SolverConfig(pods=1, lanes=16, bucket=8,
+                          partition="dynamic"), "flat_16"),
+            (SolverConfig(pods=4, lanes=4, bucket=8,
+                          partition="hierarchical"), "hier_4x4"),
+        ):
+            r = fit_timed(data, cfg, max_epochs=120)
+            _row(rows, "fig5c", name, variant, r)
+    rows += run_wire_variants(quick)
+    return emit(rows, HEADER)
+
+
+if __name__ == "__main__":
+    run()
+
+
+def run_wire_variants(quick: bool = False):
+    """SPerf glm iteration evidence: epochs under int8 sync compression
+    and partial re-deal (criteo-like).  Used by EXPERIMENTS.md SPerf-4."""
+    rows = []
+    data = load("criteo")
+    for variant, kw in (
+        ("dynamic", dict(partition="dynamic")),
+        ("alltoall", dict(partition="alltoall")),
+        ("alltoall_int8", dict(partition="alltoall",
+                               compress_sync=True)),
+        ("alltoall_frac25", dict(partition="alltoall",
+                                 redeal_frac=0.25)),
+        ("alltoall_frac25_int8", dict(partition="alltoall",
+                                      redeal_frac=0.25,
+                                      compress_sync=True)),
+    ):
+        r = fit_timed(data, SolverConfig(pods=1, lanes=16, bucket=8,
+                                         chunks=4, **kw),
+                      max_epochs=120)
+        _row(rows, "fig5d", "criteo", variant, r)
+    return rows

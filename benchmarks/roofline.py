@@ -1,0 +1,43 @@
+"""Roofline table: aggregates experiments/dryrun/*.json into the
+EXPERIMENTS.md SRoofline table (single-pod cells; multipod rows only
+prove the pod axis shards)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+HEADER = ["arch", "shape", "t_compute_s", "t_memory_s", "t_collective_s",
+          "bottleneck", "roofline_frac", "model_over_hlo", "method"]
+
+
+def rows(mesh: str = "pod"):
+    out = []
+    for p in sorted(DRYRUN.glob(f"*__{mesh}.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("status") != "ok" or "roofline" not in rec:
+            continue
+        rl = rec["roofline"]
+        out.append(dict(
+            arch=rec["arch"], shape=rec["shape"],
+            t_compute_s=rl["t_compute_s"], t_memory_s=rl["t_memory_s"],
+            t_collective_s=rl["t_collective_s"],
+            bottleneck=rl["bottleneck"],
+            roofline_frac=rl["t_compute_s"] / rl["step_time_lb_s"],
+            model_over_hlo=rl.get("model_over_hlo", float("nan")),
+            method=rec.get("counting", {}).get("method", "raw")))
+    return out
+
+
+def run(quick: bool = False):
+    rs = rows()
+    print(",".join(HEADER))
+    for r in rs:
+        print(",".join(f"{r[h]:.3e}" if isinstance(r[h], float)
+                       else str(r[h]) for h in HEADER))
+    return rs
+
+
+if __name__ == "__main__":
+    run()

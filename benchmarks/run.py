@@ -1,0 +1,48 @@
+"""Run every paper-figure benchmark at reduced scale + the roofline table.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Each module prints its own CSV block; a summary line closes the run.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from . import (fig1_wild_convergence, fig2_scaling_partitions,
+               fig3_convergence, fig4_strong_scaling, fig5_ablations,
+               fig6_solvers, roofline)
+
+BENCHES = [
+    ("fig1_wild_convergence", fig1_wild_convergence),
+    ("fig2_scaling_partitions", fig2_scaling_partitions),
+    ("fig3_convergence", fig3_convergence),
+    ("fig4_strong_scaling", fig4_strong_scaling),
+    ("fig5_ablations", fig5_ablations),
+    ("fig6_solvers", fig6_solvers),
+    ("roofline", roofline),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-shaped sizes (slower)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    total = 0
+    for name, mod in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        print(f"\n===== {name} =====")
+        t0 = time.perf_counter()
+        rows = mod.run(quick=not args.full)
+        dt = time.perf_counter() - t0
+        total += len(rows)
+        print(f"----- {name}: {len(rows)} rows in {dt:.1f}s")
+    print(f"\nbenchmarks complete: {total} rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Quickstart: train a logistic-regression GLM with the paper's solver.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Walks the public API end to end: synthetic data -> SolverConfig (the
+paper's knobs) -> GLMTrainer -> duality-gap-certified solution, and
+shows the wild-vs-domesticated contrast the paper is about.
+"""
+import time
+
+from repro.core import GLMTrainer, SolverConfig
+from repro.data import make_dense_classification
+
+
+def main() -> None:
+    # 16k examples x 100 dense features (the paper's Fig-1 shape)
+    X, y = make_dense_classification(n=16_384, d=100, seed=0)
+
+    print("== sequential baseline ==")
+    tr = GLMTrainer(X, y, objective="logistic", lam=1e-3,
+                    cfg=SolverConfig(bucket=8))
+    res = tr.fit(max_epochs=40, tol=1e-4, verbose=True)
+    print(f"epochs={res.epochs} gap={res.final_gap:.2e} "
+          f"wall={res.wall_time:.2f}s")
+
+    print("\n== domesticated parallel (2 pods x 8 lanes, dynamic) ==")
+    cfg = SolverConfig(pods=2, lanes=8, bucket=8,
+                       partition="hierarchical", aggregation="adding")
+    tr2 = GLMTrainer(X, y, objective="logistic", lam=1e-3, cfg=cfg)
+    res2 = tr2.fit(max_epochs=60, tol=1e-4, verbose=True)
+    print(f"epochs={res2.epochs} gap={res2.final_gap:.2e} "
+          f"wall={res2.wall_time:.2f}s")
+
+    print("\n== 'wild' parallel (16 lock-free lanes) ==")
+    cfg3 = SolverConfig(pods=1, lanes=16, bucket=8,
+                        partition="dynamic", aggregation="wild")
+    tr3 = GLMTrainer(X, y, objective="logistic", lam=1e-3, cfg=cfg3)
+    res3 = tr3.fit(max_epochs=40, tol=1e-4)
+    print(f"epochs={res3.epochs} converged={res3.converged} "
+          f"gap={res3.final_gap:.2e}  <- the paper's Fig-1 pathology")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Checkpointing: mesh-agnostic, atomic, keep-N, async-write."""
+from .manager import CheckpointManager, restore_tree, save_tree
+
+__all__ = ["CheckpointManager", "restore_tree", "save_tree"]

@@ -1,0 +1,5 @@
+"""Architecture registry: one module per assigned architecture."""
+from .base import ArchConfig, get_config, get_smoke, list_archs, register
+
+__all__ = ["ArchConfig", "get_config", "get_smoke", "list_archs",
+           "register"]

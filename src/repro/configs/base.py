@@ -1,0 +1,160 @@
+"""ArchConfig: one dataclass describes every supported architecture.
+
+Exact full-size configs live in one file per architecture; each exposes
+CONFIG (full size, dry-run only) and smoke() (reduced same-family config
+that trains a step on CPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # dense|moe|hybrid|ssm|encdec|vlm|audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+
+    # attention
+    attention: str = "full"      # full | mla | local
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    rope_theta: float = 1e4
+    use_rope: bool = True
+    window: int = 2048           # local attention window
+
+    # MLA
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    first_dense_layers: int = 0
+    # expert-capacity factor: tokens beyond capacity drop to the
+    # residual path during TRAINING (standard); decode never drops
+    # (T=batch << capacity), so train/decode outputs differ for
+    # dropped tokens — tests use a dropless factor to compare paths.
+    moe_capacity: float = 1.25
+
+    # hybrid / ssm
+    block_pattern: Tuple[str, ...] = ()
+    rglru_dim: int = 0
+
+    # encoder-decoder
+    is_encoder_decoder: bool = False
+    n_enc_layers: int = 0
+    enc_seq: int = 1536          # encoder length (stub frames)
+
+    # modality frontend stub: None | "audio" | "vision"
+    frontend: Optional[str] = None
+    n_patches: int = 576         # vision stub patch count
+
+    # misc
+    act: str = "silu"
+    norm: str = "rmsnorm"
+    gated_mlp: bool = True
+    learned_pos: bool = False
+    max_seq: int = 8192          # positional table size (learned_pos only)
+    dtype: object = jnp.bfloat16
+    remat: bool = True
+    fsdp: bool = False           # deprecated alias for zero="zero3"
+    zero: str = ""               # "" | "zero1" | "zero3" (see launch/steps)
+    opt_dtype: str = "f32"       # AdamW moment dtype: f32 | bf16 | int8
+    shard_resid: bool = False    # shard residual d over 'model' (SP-style)
+                                 # to fit remat'd activations of big archs
+    layout: str = "tp"           # "tp": TP over 'model' + DP over rest;
+                                 # "fsdp": batch over ALL axes, weights
+                                 # ZeRO-3-gathered per layer (measured
+                                 # winner for 20B dense at batch 1M tok)
+
+    @property
+    def batch_axes(self) -> tuple:
+        return ("pod", "data", "model") if self.layout == "fsdp" \
+            else ("pod", "data")
+
+    @property
+    def zero_stage(self) -> str:
+        if self.zero:
+            return self.zero
+        return "zero3" if self.fsdp else "none"
+    attn_chunk: int = 512        # KV-chunk of the online-softmax attention
+    unroll_layers: bool = False  # python-loop layers (HLO counting mode)
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.n_heads:
+            object.__setattr__(self, "head_dim",
+                               self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding/lm_head rows padded to 512 so the vocab dim shards
+        over the 'model' axis AND the combined ('data','model') fsdp
+        axis (labels never hit the pad)."""
+        return -(-self.vocab // 512) * 512
+
+    # -- bookkeeping used by roofline ------------------------------------
+    def param_count(self) -> int:
+        """Total parameters (embedding + blocks + head)."""
+        from repro.models import lm
+        from repro.models.layers import ParamSpec
+        import numpy as np
+        specs = lm.param_specs(self)
+        leaves = [l for l in
+                  __import__("jax").tree.flatten(
+                      specs, is_leaf=lambda x: isinstance(x, ParamSpec))[0]]
+        return int(sum(int(np.prod(l.shape)) for l in leaves))
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: routed top-k + shared)."""
+        full = self.param_count()
+        if not self.n_experts:
+            return full
+        expert_params = (self.n_layers - self.first_dense_layers) * \
+            self.n_experts * 3 * self.d_model * self.moe_d_ff
+        active_expert = expert_params * self.top_k / self.n_experts
+        return int(full - expert_params + active_expert)
+
+
+_REGISTRY: dict = {}
+
+
+def register(cfg_module_name: str, cfg: ArchConfig, smoke_fn) -> None:
+    _REGISTRY[cfg.name] = (cfg, smoke_fn)
+
+
+def get_config(name: str) -> ArchConfig:
+    _ensure_loaded()
+    return _REGISTRY[name][0]
+
+
+def get_smoke(name: str) -> ArchConfig:
+    _ensure_loaded()
+    return _REGISTRY[name][1]()
+
+
+def list_archs() -> list[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def _ensure_loaded():
+    if _REGISTRY:
+        return
+    import importlib
+    for m in ("whisper_base", "kimi_k2", "deepseek_v2_lite", "smollm_360m",
+              "minicpm3_4b", "granite_20b", "internlm2_20b",
+              "recurrentgemma_2b", "phi3_vision", "xlstm_1_3b"):
+        importlib.import_module(f"repro.configs.{m}")

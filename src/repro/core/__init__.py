@@ -1,0 +1,21 @@
+"""Core: the paper's contribution — system-aware parallel SDCA."""
+from .bucketing import BucketPlan, choose_bucket_size, make_plan
+from .cocoa import SolverConfig, epoch_sim, epoch_sim_sparse
+from .objectives import (HINGE, LOGISTIC, OBJECTIVES, RIDGE, Objective,
+                         duality_gap, dual_value, get_objective,
+                         primal_value)
+from .partition import PartitionPlan
+from .sdca import (bucket_solve, dense_local_subepoch, sequential_epoch,
+                   sparse_local_subepoch)
+from .trainer import FitResult, GLMTrainer
+
+__all__ = [
+    "BucketPlan", "choose_bucket_size", "make_plan",
+    "SolverConfig", "epoch_sim", "epoch_sim_sparse",
+    "HINGE", "LOGISTIC", "OBJECTIVES", "RIDGE", "Objective",
+    "duality_gap", "dual_value", "get_objective", "primal_value",
+    "PartitionPlan",
+    "bucket_solve", "dense_local_subepoch", "sequential_epoch",
+    "sparse_local_subepoch",
+    "FitResult", "GLMTrainer",
+]

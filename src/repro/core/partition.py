@@ -1,0 +1,128 @@
+"""Bucket-to-worker partitioning schedules.
+
+Schemes (first three from the paper, 'rotation' is our TPU-native form):
+  * static      — bucket b is owned by lane (b * K) // nb forever.  Cheap,
+                  but convergence degrades with K (paper Fig 2b).
+  * dynamic     — a fresh permutation of bucket ids every epoch; lane k
+                  takes the k-th slice.  The paper's novel contribution
+                  (affordable inside a node / pod, not across).
+  * hierarchical— static split across pods (outer axis, slow interconnect)
+                  x dynamic within each pod (paper's NUMA scheme).
+  * rotation    — lane k takes the block of lane (k + epoch) % K,
+                  shuffled locally.  KEPT AS A REFUTED HYPOTHESIS: it
+                  was our first TPU mapping (one collective_permute per
+                  epoch), but rotating ownership of FIXED blocks leaves
+                  the subproblem sets unchanged — workers are symmetric,
+                  so it is convergence-EQUIVALENT TO STATIC (measured in
+                  fig5a; hypothesis log in EXPERIMENTS.md SPerf).
+  * alltoall    — the TPU-native dynamic scheme the distributed launcher
+                  actually uses (launch/glm.py): every epoch each lane
+                  shuffles its buckets locally, splits them K ways, and
+                  exchanges via ONE balanced all-to-all, so every new
+                  block mixes buckets from every old block.  Same wire
+                  bytes as rotation, convergence parity with 'dynamic'
+                  (fig5a).
+
+Schedules are pure functions of (seed, epoch), so checkpoint/restart and
+elastic re-runs reproduce the exact visiting order without host state.
+
+Straggler mitigation: with over_decompose=c, each lane is dealt c*
+`chunks` chunks per epoch and a lane that completes only some of them
+simply contributes fewer buckets to that sync interval; the next epoch's
+re-deal (dynamic) naturally rebalances.  The simulation driver exposes a
+`straggler_mask` to exercise this path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+Mode = Literal["static", "dynamic", "hierarchical", "rotation",
+               "alltoall"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionPlan:
+    n_buckets: int          # global bucket count (divisible by pods*lanes)
+    pods: int               # outer (static) axis, paper's NUMA nodes
+    lanes: int              # inner (dynamic) axis, paper's threads
+    mode: Mode = "hierarchical"
+    seed: int = 0
+    # alltoall only: fraction of each lane's buckets exchanged per epoch
+    # (1.0 = full re-deal; smaller = less wire for nearly the same
+    # convergence — see fig5a / EXPERIMENTS.md SPerf glm iteration)
+    redeal_frac: float = 1.0
+
+    def __post_init__(self):
+        if self.n_buckets % (self.pods * self.lanes):
+            raise ValueError(
+                f"n_buckets={self.n_buckets} must divide by pods*lanes="
+                f"{self.pods * self.lanes}")
+
+    @property
+    def per_lane(self) -> int:
+        return self.n_buckets // (self.pods * self.lanes)
+
+    def schedule(self, epoch) -> jax.Array:
+        """Bucket ids per worker for one epoch: (pods, lanes, per_lane).
+
+        jit-safe: `epoch` may be a traced int32 scalar.
+        """
+        nb, P, K = self.n_buckets, self.pods, self.lanes
+        per_pod = nb // P
+        base = jnp.arange(nb, dtype=jnp.int32).reshape(P, per_pod)
+        if self.mode == "static":
+            return base.reshape(P, K, self.per_lane)
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed),
+                                 jnp.asarray(epoch, jnp.int32))
+        if self.mode == "dynamic":
+            # one global shuffle: buckets may migrate across pods too
+            # (single-node view: pods=1 gives the paper's in-node scheme)
+            perm = jax.random.permutation(key, nb).astype(jnp.int32)
+            return perm.reshape(P, K, self.per_lane)
+        if self.mode == "rotation":
+            # ring-rotate lane blocks within each pod + local shuffle
+            blocks = base.reshape(P, K, self.per_lane)
+            shift = jnp.asarray(epoch, jnp.int32) % K
+            blocks = jnp.roll(blocks, -shift, axis=1)
+            keys = jax.random.split(key, P * K).reshape(P, K, -1)
+            perms = jax.vmap(jax.vmap(
+                lambda k: jax.random.permutation(k, self.per_lane)))(keys)
+            return jnp.take_along_axis(
+                blocks, perms.astype(jnp.int32), axis=2)
+        if self.mode == "alltoall":
+            # iterate the (local shuffle -> balanced transpose) re-deal
+            # `epoch+1` times; pure function of (seed, epoch) as required
+            if self.per_lane % K:
+                raise ValueError(f"alltoall needs per_lane % lanes == 0,"
+                                 f" got {self.per_lane} % {K}")
+            blocks0 = base.reshape(P, K, self.per_lane)
+            exch = int(self.per_lane * self.redeal_frac) // K * K
+            exch = max(exch, K) if self.redeal_frac > 0 else 0
+
+            def round_(r, blocks):
+                rk = jax.random.fold_in(jax.random.PRNGKey(self.seed), r)
+                keys = jax.random.split(rk, P * K).reshape(P, K, 2)
+                perms = jax.vmap(jax.vmap(lambda k: jax.random.permutation(
+                    k, self.per_lane)))(keys)
+                sh = jnp.take_along_axis(blocks, perms.astype(jnp.int32),
+                                         axis=2)
+                if exch == 0:
+                    return sh
+                # exchange only the first `exch` buckets of each lane:
+                # split K ways, transpose across lanes (= all_to_all)
+                head = sh[:, :, :exch].reshape(P, K, K, exch // K)
+                head = head.swapaxes(1, 2).reshape(P, K, exch)
+                return jnp.concatenate([head, sh[:, :, exch:]], axis=2)
+
+            return jax.lax.fori_loop(
+                0, jnp.asarray(epoch, jnp.int32) + 1, round_, blocks0)
+        # hierarchical: shuffle independently inside each pod's static range
+        keys = jax.random.split(key, P)
+        perms = jax.vmap(
+            lambda k: jax.random.permutation(k, per_pod))(keys)
+        ids = jnp.take_along_axis(base, perms.astype(jnp.int32), axis=1)
+        return ids.reshape(P, K, self.per_lane)

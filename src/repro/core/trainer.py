@@ -1,0 +1,155 @@
+"""GLMTrainer: epochs, convergence detection, metrics, checkpoint/restart.
+
+Convergence is declared the way the paper does it: when the relative
+change of the learned model between consecutive epochs drops below a
+threshold.  The duality gap (a certificate, not available to the paper's
+stopping rule) is also tracked for tests and benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import cocoa, objectives, sdca
+from .bucketing import BucketPlan, make_plan
+from .cocoa import SolverConfig
+from .objectives import Objective, get_objective
+from .partition import PartitionPlan
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class FitResult:
+    epochs: int
+    converged: bool
+    diverged: bool
+    v: np.ndarray
+    alpha: np.ndarray
+    history: list[dict[str, float]]
+    wall_time: float
+
+    @property
+    def final_gap(self) -> float:
+        return self.history[-1]["gap"] if self.history else float("nan")
+
+
+class GLMTrainer:
+    """Paper's solver: bucketed, dynamically partitioned, hierarchical SDCA.
+
+    dense:  X (d, n);  sparse: (idx, val) padded CSR, plus d.
+    """
+
+    def __init__(self, X, y, *, objective: str | Objective = "logistic",
+                 lam: float = 1e-3, cfg: SolverConfig = SolverConfig(),
+                 sparse: bool = False, d: Optional[int] = None,
+                 bucket_force: Optional[int] = None):
+        self.obj = (objective if isinstance(objective, Objective)
+                    else get_objective(objective))
+        self.lam = float(lam)
+        self.cfg = cfg
+        self.sparse = sparse
+        if sparse:
+            idx, val = X
+            self.idx = jnp.asarray(idx, jnp.int32)
+            self.val = jnp.asarray(val, jnp.float32)
+            self.n = self.val.shape[0]
+            self.d = int(d)
+        else:
+            self.X = jnp.asarray(X)
+            self.d, self.n = self.X.shape
+        self.y = jnp.asarray(y)
+
+        force = bucket_force if bucket_force is not None else cfg.bucket
+        self.bplan = make_plan(self.n, self.d, force=force or 1)
+        self.plan = PartitionPlan(
+            n_buckets=self.bplan.n_buckets, pods=cfg.pods, lanes=cfg.lanes,
+            mode=cfg.partition, seed=cfg.seed,
+            redeal_frac=cfg.redeal_frac)
+
+        self.alpha = jnp.zeros(self.n, jnp.float32)
+        self.v = jnp.zeros(self.d, jnp.float32)
+        self.epoch = 0
+
+        if sparse:
+            self._epoch_fn = jax.jit(
+                lambda a, v, e: cocoa.epoch_sim_sparse(
+                    self.obj, self.idx, self.val, self.y, a, v, self.lam,
+                    self.plan, self.bplan, self.cfg, e))
+        else:
+            self._epoch_fn = jax.jit(
+                lambda a, v, e: cocoa.epoch_sim(
+                    self.obj, self.X, self.y, a, v, self.lam,
+                    self.plan, self.bplan, self.cfg, e))
+
+    # -- diagnostics ------------------------------------------------------
+    def gap(self) -> float:
+        if self.sparse:
+            m = jnp.sum(self.v[self.idx] * self.val, axis=1)
+            n = self.n
+            p = (jnp.sum(self.obj.loss(m, self.y)) / n
+                 + 0.5 * self.lam * jnp.sum(self.v ** 2))
+            dval = objectives.dual_value(self.obj, self.alpha, self.v,
+                                         self.y, self.lam)
+            return float(p - dval)
+        return float(objectives.duality_gap(
+            self.obj, self.alpha, self.v, self.X, self.y, self.lam))
+
+    def primal(self) -> float:
+        if self.sparse:
+            m = jnp.sum(self.v[self.idx] * self.val, axis=1)
+            return float(jnp.sum(self.obj.loss(m, self.y)) / self.n
+                         + 0.5 * self.lam * jnp.sum(self.v ** 2))
+        return float(objectives.primal_value(
+            self.obj, self.v, self.X, self.y, self.lam))
+
+    # -- training ---------------------------------------------------------
+    def fit(self, max_epochs: int = 100, tol: float = 1e-3,
+            gap_every: int = 0, verbose: bool = False,
+            diverge_above: float = 1e8) -> FitResult:
+        history: list[dict[str, float]] = []
+        t0 = time.perf_counter()
+        converged = diverged = False
+        for _ in range(max_epochs):
+            v_prev = self.v
+            self.alpha, self.v = self._epoch_fn(
+                self.alpha, self.v, jnp.int32(self.epoch))
+            self.epoch += 1
+            rel = float(jnp.linalg.norm(self.v - v_prev)
+                        / jnp.maximum(jnp.linalg.norm(self.v), 1e-30))
+            rec = {"epoch": self.epoch, "rel_change": rel,
+                   "t": time.perf_counter() - t0}
+            if gap_every and self.epoch % gap_every == 0:
+                rec["gap"] = self.gap()
+            history.append(rec)
+            if verbose:
+                print(f"epoch {self.epoch:4d} rel={rel:.3e} "
+                      + (f"gap={rec['gap']:.3e}" if "gap" in rec else ""))
+            vmax = float(jnp.max(jnp.abs(self.v)))
+            if not np.isfinite(vmax) or vmax > diverge_above:
+                diverged = True
+                break
+            if rel < tol:
+                converged = True
+                break
+        if history and "gap" not in history[-1]:
+            history[-1]["gap"] = self.gap() if not diverged else float("inf")
+        return FitResult(
+            epochs=self.epoch, converged=converged, diverged=diverged,
+            v=np.asarray(self.v), alpha=np.asarray(self.alpha),
+            history=history, wall_time=time.perf_counter() - t0)
+
+    # -- checkpoint/restart ------------------------------------------------
+    def state_dict(self) -> dict[str, Any]:
+        return {"alpha": np.asarray(self.alpha), "v": np.asarray(self.v),
+                "epoch": np.int64(self.epoch)}
+
+    def load_state_dict(self, st: dict[str, Any]) -> None:
+        self.alpha = jnp.asarray(st["alpha"])
+        self.v = jnp.asarray(st["v"])
+        self.epoch = int(st["epoch"])

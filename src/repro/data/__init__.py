@@ -1,0 +1,12 @@
+"""Data substrate: synthetic GLM datasets + LM token pipeline."""
+from .synthetic import (criteo_like, epsilon_like, higgs_like,
+                        make_dense_classification, make_dense_regression,
+                        make_sparse_classification)
+from .loader import ShardedBatcher, lm_token_batches
+
+__all__ = [
+    "criteo_like", "epsilon_like", "higgs_like",
+    "make_dense_classification", "make_dense_regression",
+    "make_sparse_classification",
+    "ShardedBatcher", "lm_token_batches",
+]

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical hot loops.
+
+sdca_bucket — the paper's bucketed SDCA sub-epoch (VMEM-resident shared
+              vector, streamed bucket tiles, MXU Gram/margin matmuls).
+rglru       — RG-LRU gated linear recurrence (RecurrentGemma hot loop).
+
+Each kernel ships ops.py (jit'd wrapper + padding + CPU interpret
+fallback) and ref.py (pure-jnp oracle used by the allclose sweeps).
+"""
+from . import ops, ref, rglru, sdca_bucket
+
+__all__ = ["ops", "ref", "rglru", "sdca_bucket"]

@@ -1,0 +1,114 @@
+"""Jit'd wrappers around the Pallas kernels, with padding + CPU fallback.
+
+`sdca_bucket_subepoch` is call-compatible with
+`repro.core.sdca.dense_local_subepoch` so the epoch drivers can route
+through the kernel with cfg.use_kernel=True.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.objectives import Objective
+from . import sdca_bucket, rglru as _rglru
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def sdca_bucket_subepoch(obj: Objective, Xl, yl, al, v0, lam_n, sig, *,
+                         bucket: int, interpret: bool | None = None):
+    """One worker's sub-epoch via the Pallas kernel.
+
+    Xl: (d, n_local) columns in visiting order; returns (a_new, dv_raw)
+    where dv_raw is the UNSCALED global delta (CoCoA+ convention, same as
+    dense_local_subepoch).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    d, n_local = Xl.shape
+    B = bucket
+    nb = n_local // B
+    d_pad = _round_up(max(d, 8), 8)
+    B_pad = _round_up(max(B, 8), 8)
+
+    xb = Xl.reshape(d, nb, B).transpose(1, 0, 2)
+    if d_pad != d or B_pad != B:
+        xb = jnp.pad(xb, ((0, 0), (0, d_pad - d), (0, B_pad - B)))
+    yb = yl.reshape(nb, B)
+    ab = al.reshape(nb, B)
+    if B_pad != B:
+        # padded coordinates: x column is all-zero => q=0, m=0.  Give them
+        # y such that delta(0, 0, y, 0) == 0 for every objective:
+        # ridge: (y-0-0)/(1+0) = y -> needs y=0;  hinge/logistic are safe
+        # with y=+1 & a=0?  hinge: clip(0*1 + (1-0)/max(q,eps)) -> huge.
+        # Zero columns make the v-update a no-op regardless of delta, and
+        # alpha updates on padding are discarded, so any finite y works;
+        # use y=0 for ridge-neutrality and rely on eps-guards elsewhere.
+        yb = jnp.pad(yb, ((0, 0), (0, B_pad - B)))
+        ab = jnp.pad(ab, ((0, 0), (0, B_pad - B)))
+
+    v0p = jnp.zeros((d_pad, 1), jnp.float32).at[:d, 0].set(
+        v0.astype(jnp.float32))
+    scal = jnp.stack([jnp.float32(lam_n), jnp.float32(sig)])
+
+    a_new, v_fin = sdca_bucket.sdca_bucket_kernel(
+        obj, xb, yb, ab, v0p, scal, interpret)
+
+    a_out = a_new[:, :B].reshape(-1)
+    dv = (v_fin[:d, 0] - v0.astype(jnp.float32)) / jnp.float32(sig)
+    return a_out.astype(al.dtype), dv.astype(v0.dtype)
+
+
+def rglru_scan(x, a_log, gate_a, gate_x, h0, *, block_t: int = 128,
+               interpret: bool | None = None):
+    """Blocked RG-LRU linear recurrence; see kernels/rglru.py."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _rglru.rglru_kernel(x, a_log, gate_a, gate_x, h0,
+                               block_t=block_t, interpret=interpret)
+
+
+def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool | None = None):
+    """(B, S, H, hd) flash attention via the Pallas kernel.
+
+    Pads Sq/Sk to block multiples and hd to the 128-lane tile; the true
+    kv length rides in as a mask bound.  On non-TPU backends callers
+    should prefer models.attention.blocked_attention (this wrapper runs
+    the kernel in interpret mode there — correct but slow).
+    """
+    from . import flash_attention as _fa
+    if interpret is None:
+        interpret = _interpret_default()
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]
+    G = H // Hkv
+    bq_ = min(bq, _round_up(Sq, 8))
+    bk_ = min(bk, _round_up(Sk, 8))
+    sq_p = _round_up(Sq, bq_)
+    sk_p = _round_up(Sk, bk_)
+    hd_p = _round_up(hd, 128) if not interpret else hd
+    hdv_p = _round_up(hd_v, 128) if not interpret else hd_v
+
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, hd_v)
+    qf = jnp.pad(qf, ((0, 0), (0, sq_p - Sq), (0, hd_p - hd)))
+    kf = jnp.pad(kf, ((0, 0), (0, sk_p - Sk), (0, hd_p - hd)))
+    vf = jnp.pad(vf, ((0, 0), (0, sk_p - Sk), (0, hdv_p - hd_v)))
+
+    o = _fa.flash_attention_kernel(qf, kf, vf, kind=kind, window=window,
+                                   bq=bq_, bk=bk_, group=G, seq_k=Sk,
+                                   interpret=interpret)
+    o = o[:, :Sq, :hd_v].reshape(B, H, Sq, hd_v)
+    return o.transpose(0, 2, 1, 3)

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Deliberately written as the NAIVE per-coordinate algorithm (no Gram
+trick), so the kernel test also cross-validates the bucket/Gram
+reformulation used everywhere else.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.objectives import Objective
+
+Array = jax.Array
+
+
+def sdca_subepoch_ref(obj: Objective, X: Array, y: Array, a: Array,
+                      v0: Array, lam_n, sig) -> tuple[Array, Array]:
+    """Per-coordinate sequential SDCA over columns of X (d, n_local).
+
+    Returns (a_new, v_final) with v_final = v0 + sigma'/lam_n * X@(da).
+    """
+    X = X.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    a = a.astype(jnp.float32)
+    lam_n = jnp.float32(lam_n)
+    sig = jnp.float32(sig)
+
+    def step(v, inp):
+        x, yi, ai = inp
+        m = jnp.vdot(x, v)
+        q = sig * jnp.vdot(x, x) / lam_n
+        d = obj.delta(m, ai, yi, q)
+        return v + (sig * d / lam_n) * x, ai + d
+
+    v1, a_new = jax.lax.scan(step, v0.astype(jnp.float32),
+                             (X.T, y, a))
+    return a_new, v1
+
+
+def rglru_ref(x: Array, a_log: Array, gate_a: Array, gate_x: Array,
+              h0: Array) -> Array:
+    """RG-LRU linear recurrence oracle (see kernels/rglru.py).
+
+    x, gate_a, gate_x: (T, D); a_log: (D,) base decay log(a) < 0;
+    h0: (D,). Returns h: (T, D) with
+
+        r_t  = sigmoid(gate_a_t);  i_t = sigmoid(gate_x_t)
+        a_t  = exp(c * a_log * r_t)            (c = 8, per the paper)
+        h_t  = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+    """
+    c = 8.0
+
+    def step(h, inp):
+        xt, ga, gx = inp
+        r = jax.nn.sigmoid(ga)
+        i = jax.nn.sigmoid(gx)
+        log_a = c * a_log * r
+        at = jnp.exp(log_a)
+        mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+        h = at * h + mult * (i * xt)
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, (x, gate_a, gate_x))
+    return hs

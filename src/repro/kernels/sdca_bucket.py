@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: one worker's bucketed SDCA sub-epoch.
+
+This is the paper's cache-line bucket, re-blocked for the TPU memory
+hierarchy (DESIGN.md S2/S6):
+
+  * the shared-vector replica v (d_pad x 1) is pinned in VMEM for the
+    whole sub-epoch via input/output aliasing + a constant index map —
+    the VMEM analogue of the paper keeping the hot state cache-resident;
+  * each grid step streams ONE bucket tile X_b (d_pad x B) HBM->VMEM and
+    uses it three times (margins, Gram, v-update) — one HBM pass where
+    the unbucketed algorithm does B strided passes;
+  * margins + Gram go through the MXU (two matmuls), the in-bucket
+    recursion is O(B^2) scalar work on VMEM-resident vectors.
+
+Grid is 1-D over buckets with "arbitrary" dimension semantics: buckets
+are processed IN ORDER, which is what makes the kernel bit-equivalent to
+sequential SDCA over the same visiting order.
+
+d_pad must be a multiple of 8 (f32 sublane tile); B a multiple of 8 and
+<= 512.  Zero-padded feature rows are harmless (they contribute 0 to
+every inner product).  Scalars (lam*n, sigma') ride in SMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.objectives import Objective
+
+Array = jax.Array
+
+
+def _kernel(obj: Objective, x_ref, y_ref, a_ref, scal_ref, v_ref,
+            aout_ref, vout_ref):
+    """Body for one bucket (one grid step)."""
+    first = pl.program_id(0) == 0
+
+    # v lives in the aliased output block; seed it from the input once.
+    @pl.when(first)
+    def _():
+        vout_ref[...] = v_ref[...]
+
+    x = x_ref[0].astype(jnp.float32)            # (d_pad, B)
+    y = y_ref[0].astype(jnp.float32)            # (B,)
+    a0 = a_ref[0].astype(jnp.float32)           # (B,)
+    lam_n = scal_ref[0]
+    sig = scal_ref[1]
+    v = vout_ref[...]                           # (d_pad, 1) f32
+
+    m0 = (x.T @ v)[:, 0]                        # (B,)   MXU
+    G = x.T @ x                                 # (B,B)  MXU
+    gdiag = jnp.diag(G)
+
+    B = m0.shape[0]
+
+    def body(i, carry):
+        m, deltas = carry
+        q = sig * jax.lax.dynamic_index_in_dim(gdiag, i, keepdims=False) \
+            / lam_n
+        mi = jax.lax.dynamic_index_in_dim(m, i, keepdims=False)
+        ai = jax.lax.dynamic_index_in_dim(a0, i, keepdims=False)
+        yi = jax.lax.dynamic_index_in_dim(y, i, keepdims=False)
+        d = obj.delta(mi, ai, yi, q)
+        grow = jax.lax.dynamic_slice_in_dim(G, i, 1, axis=0)[0]   # (B,)
+        m = m + (sig * d / lam_n) * grow
+        deltas = jax.lax.dynamic_update_index_in_dim(deltas, d, i, axis=0)
+        return m, deltas
+
+    _, deltas = jax.lax.fori_loop(0, B, body, (m0, jnp.zeros_like(m0)))
+
+    vout_ref[...] = v + (sig / lam_n) * (x @ deltas[:, None])
+    aout_ref[0] = (a0 + deltas).astype(aout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 6))
+def sdca_bucket_kernel(obj: Objective, xb: Array, yb: Array, ab: Array,
+                       v0: Array, scal: Array,
+                       interpret: bool = False) -> tuple[Array, Array]:
+    """Run the sub-epoch kernel.
+
+    xb: (nb, d_pad, B) bucket tiles in visiting order
+    yb, ab: (nb, B);  v0: (d_pad, 1) f32;  scal: (2,) f32 = [lam*n, sigma']
+    Returns (a_new (nb, B), v_final (d_pad, 1)).  v_final includes the
+    sigma'-scaled local evolution (callers unscale the global delta).
+    """
+    nb, d_pad, B = xb.shape
+    if d_pad % 8 or B % 8:
+        raise ValueError(f"d_pad ({d_pad}) and B ({B}) must be multiples of 8")
+
+    grid = (nb,)
+    a_new, v_fin = pl.pallas_call(
+        functools.partial(_kernel, obj),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d_pad, B), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((d_pad, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec((d_pad, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, B), ab.dtype),
+            jax.ShapeDtypeStruct((d_pad, 1), jnp.float32),
+        ],
+        input_output_aliases={4: 1},   # v0 buffer reused as v_final
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(xb, yb, ab, scal, v0)
+    return a_new, v_fin

@@ -1,0 +1,133 @@
+"""Correct HLO cost counting on XLA:CPU (which counts loop bodies once).
+
+The record artifact (scan-over-layers + remat + chunked attention) is
+what proves compile/fit, but XLA:CPU's cost_analysis counts a while-loop
+body ONCE, not x trip-count — so scanned layers and the attention
+KV-chunk scan under-report flops/bytes/collective-bytes.
+
+Fix: lower UNROLLED counting variants at two depths and two attention
+chunk sizes and solve the linear system (everything else is constant):
+
+    F(L, c) = base + n_rep(L) * (g + b_pat(c)) + b_ht(c)
+    b(2c) = 2 b(c)            (attention one-trip body is linear in c)
+
+    pat_b = [F(L2,2c) - F(L1,2c)] - [F(L2,c) - F(L1,c)]
+    ht_b  = [F(L1,2c) - F(L1,c)] - pat_b
+    D_L   = F(L2,c) - F(L1,c)
+    F_full = F(L1,c) + (n_rep-1) * D_L
+             + (n_chunks-1) * (ht_b + n_rep * pat_b)
+
+Applied uniformly to flops, bytes-accessed, and per-collective bytes.
+Exceptions (documented per-cell in the JSON):
+  * decode cells have no attention scan -> 2 lowers, no chunk term;
+  * xlstm's chunkwise mLSTM body is quadratic in c (linearity breaks)
+    and sLSTM scans time -> analytic model (flops_model.py) instead;
+  * GLM cells (fori over sync chunks, scan over coordinates) -> analytic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+
+from repro.models.lm import layer_layout
+from .hlo_analysis import collective_bytes
+
+_COUNT_KEYS = ("flops", "bytes accessed")
+
+
+def _measure(lowered) -> dict:
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    out = {k: float(cost.get(k, 0.0)) for k in _COUNT_KEYS}
+    out["coll"] = float(sum(v for k, v in coll.items() if k != "count"))
+    for k, v in coll.items():
+        out[f"coll.{k}"] = float(v)
+    return out
+
+
+def _combine(ms: dict, n_rep: int, n_chunks: int) -> dict:
+    """Solve the linear system per metric; ms keys: l1c, l2c, l1c2, l2c2.
+
+    Also emits `attn_term.<metric>` — the total attention-scan
+    contribution at full depth — so variant analyses (e.g. the flash
+    kernel substitution) can subtract exactly what they replace.
+    """
+    out = {}
+    for key in ms["l1c"]:
+        f11, f21 = ms["l1c"][key], ms["l2c"][key]
+        d_l = f21 - f11
+        if "l1c2" in ms:
+            f12, f22 = ms["l1c2"][key], ms["l2c2"][key]
+            pat_b = (f22 - f12) - (f21 - f11)
+            ht_b = (f12 - f11) - pat_b
+            extra = (n_chunks - 1) * (ht_b + n_rep * pat_b)
+            out[f"attn_term.{key}"] = n_chunks * (ht_b + n_rep * pat_b)
+        else:
+            extra = 0.0
+        out[key] = f11 + (n_rep - 1) * d_l + extra
+    return out
+
+
+def counting_cost(cfg, lower_fn: Callable, *, seq: int, kind: str,
+                  per_dev_batch: int = 1) -> dict:
+    """-> corrected {flops, bytes accessed, coll, coll.<kind>} for one cell.
+
+    lower_fn(cfg_variant) must lower the SAME step with a modified config.
+    per_dev_batch scales the analytic ssm correction (which is per-row).
+    """
+    head, pat, n_rep, tail = layer_layout(cfg)
+    pat_len = len(pat)
+    base_layers = len(head) + len(tail)
+    l1 = base_layers + pat_len
+    l2 = base_layers + 2 * pat_len
+    c = cfg.attn_chunk
+    n_chunks = max(seq // c, 1)
+
+    def variant(n_layers, chunk):
+        return dataclasses.replace(
+            cfg, n_layers=n_layers, unroll_layers=True, attn_chunk=chunk)
+
+    ms = {"l1c": _measure(lower_fn(variant(l1, c))),
+          "l2c": _measure(lower_fn(variant(l2, c)))}
+    chunkable = kind in ("train", "prefill") and n_chunks > 1 \
+        and cfg.family != "ssm"      # mlstm body is quadratic in c
+    if chunkable:
+        ms["l1c2"] = _measure(lower_fn(variant(l1, 2 * c)))
+        ms["l2c2"] = _measure(lower_fn(variant(l2, 2 * c)))
+    out = _combine(ms, n_rep, n_chunks)
+    out["method"] = ("unroll-extrapolate-4pt" if "l1c2" in ms
+                     else "unroll-extrapolate-2pt")
+    if cfg.family == "ssm" and kind in ("train", "prefill"):
+        out["flops"] += per_dev_batch * _ssm_scan_flops_correction(
+            cfg, seq, kind)
+        out["method"] += "+ssm-analytic"
+    return out
+
+
+def _ssm_scan_flops_correction(cfg, seq: int, kind: str) -> float:
+    """Per-batch-row flop correction for xLSTM's internal scans.
+
+    In the unrolled counting lowers the mLSTM chunk scan and the sLSTM
+    time scan are still while loops (counted once); add the missing
+    (trips-1) * body analytically.  Train counts fwd+bwd+remat ~ 3x fwd.
+    """
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    c = min(cfg.attn_chunk or 256, seq)
+    nc = max(seq // c, 1)
+    n_mlstm = sum(k == "mlstm" for k in cfg.block_pattern) \
+        * (cfg.n_layers // max(len(cfg.block_pattern), 1))
+    n_slstm = sum(k == "slstm" for k in cfg.block_pattern) \
+        * (cfg.n_layers // max(len(cfg.block_pattern), 1))
+    # one mLSTM chunk body (B=1): intra scores+values 4c^2*H*hd,
+    # gate maps ~8c^2*H, state update + inter 8c*H*hd^2
+    body_m = 4 * c * c * H * hd + 8 * c * c * H + 8 * c * H * hd * hd
+    # one sLSTM time step (B=1): recurrent matmul + elementwise
+    body_s = 2 * d * d + 16 * d
+    fwdbwd = 3.0 if kind == "train" else 1.0
+    return fwdbwd * (n_mlstm * (nc - 1) * body_m
+                     + n_slstm * (seq - 1) * body_s)

@@ -1,0 +1,212 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: a successful .lower().compile() for the production meshes,
+plus memory_analysis (fits) and cost_analysis + collective-bytes (feeds
+EXPERIMENTS.md SRoofline).
+
+Two artifacts per cell (see counting.py for why):
+  * RECORD — scan-over-layers + remat + chunked attention: the deployed
+    program; compile success + memory_analysis are taken from it.
+  * COUNTING (single-pod cells only) — unrolled variants whose HLO cost
+    analysis is extrapolated to full depth; feeds the roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m \
+        --shape train_4k --mesh pod,multipod
+
+Results are written incrementally to experiments/dryrun/*.json.
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs import get_config, list_archs
+from repro.launch import glm as glm_launch
+from repro.launch import steps as steps_lib
+from repro.launch.counting import counting_cost
+from repro.launch.hlo_analysis import (Roofline, analyze,
+                                       memory_analysis_dict)
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                               make_production_mesh, mesh_chips)
+from repro.launch.specs import SHAPES, applicable, input_specs
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+MESHES = {"pod": False, "multipod": True}
+
+
+def lower_lm_cell(cfg, shape_name: str, mesh):
+    import math
+    import dataclasses as _dc
+    shape = SHAPES[shape_name]
+    if cfg.layout != "tp":
+        chips = math.prod(mesh.devices.shape)
+        if shape.kind != "train" or shape.batch % chips:
+            # fsdp layout is train-only AND needs batch >= all chips
+            # (at 512 chips with batch 256 the TP layout is retained;
+            # deployment would raise global batch instead)
+            cfg = _dc.replace(cfg, layout="tp")
+    step = steps_lib.step_for(cfg, shape.kind)
+    inputs = input_specs(cfg, shape, mesh)
+    if shape.kind == "train":
+        opt_cfg = steps_lib.make_opt_cfg(cfg)
+        p_abs = steps_lib.abstract_params(cfg, mesh)
+        o_abs = steps_lib.abstract_opt_state(cfg, mesh, opt_cfg)
+        out_sh = (jax.tree.map(lambda s: s.sharding, p_abs),
+                  jax.tree.map(lambda s: s.sharding, o_abs),
+                  None)
+        fn = jax.jit(steps_lib.make_train_step(cfg, opt_cfg),
+                     out_shardings=out_sh, donate_argnums=(0, 1))
+        return fn.lower(p_abs, o_abs, inputs)
+    p_abs = steps_lib.abstract_params(cfg, mesh)
+    if shape.kind == "decode":
+        out_sh = (None, jax.tree.map(lambda s: s.sharding,
+                                     inputs["cache"]))
+        fn = jax.jit(step, out_shardings=out_sh, donate_argnums=(1,))
+        return fn.lower(p_abs, inputs)
+    return jax.jit(step).lower(p_abs, inputs)
+
+
+def lower_cell(arch: str, shape_name: str, mesh):
+    if arch.startswith("glm-"):
+        return glm_launch.lower_glm(arch, mesh)
+    return lower_lm_cell(get_config(arch), shape_name, mesh)
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N_active*tokens (train) / 2*N_active*tokens (infer),
+    N_active excluding the embedding table (lm_head matmul is counted)."""
+    n_act = cfg.active_param_count() - cfg.vocab * cfg.d_model
+    if shape.kind == "train":
+        return 6.0 * n_act * shape.batch * shape.seq
+    if shape.kind == "prefill":
+        return 2.0 * n_act * shape.batch * shape.seq
+    return 2.0 * n_act * shape.batch          # decode: one token per row
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             out_dir: pathlib.Path, skip_existing: bool = False,
+             counting: bool = True) -> dict:
+    tag = f"{arch}__{shape_name}__{mesh_name}"
+    path = out_dir / f"{tag}.json"
+    if skip_existing and path.exists():
+        rec = json.loads(path.read_text())
+        print(f"[skip] {tag}: cached ({rec['status']})", flush=True)
+        return rec
+    mesh = make_production_mesh(multi_pod=MESHES[mesh_name])
+    chips = mesh_chips(mesh)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "chips": chips}
+    if not arch.startswith("glm-"):
+        ok, why = applicable(get_config(arch), SHAPES[shape_name])
+        if not ok:
+            rec.update(status="skipped", reason=why)
+            path.write_text(json.dumps(rec, indent=1))
+            print(f"[skip] {tag}: {why}", flush=True)
+            return rec
+    t0 = time.perf_counter()
+    try:
+        with mesh:
+            lowered = lower_cell(arch, shape_name, mesh)
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+            rl_raw, raw = analyze(compiled, peak_flops=PEAK_FLOPS,
+                                  hbm_bw=HBM_BW, link_bw=ICI_BW)
+            mem = memory_analysis_dict(compiled)
+            rec.update(status="ok", t_lower_s=t_lower,
+                       t_compile_s=t_compile, memory_analysis=mem,
+                       raw_roofline=rl_raw.as_dict(), **raw)
+
+            # counting pass (roofline of record): single-pod mesh only
+            if counting and mesh_name == "pod":
+                if arch.startswith("glm-"):
+                    cnt = glm_launch.glm_analytic(
+                        glm_launch.GLM_CONFIGS[arch], mesh)
+                else:
+                    cfg = get_config(arch)
+                    shape = SHAPES[shape_name]
+                    bdiv = mesh.shape.get("pod", 1) * \
+                        mesh.shape.get("data", 1)
+                    pdb = max(shape.batch // bdiv, 1)
+                    cnt = counting_cost(
+                        cfg, lambda c: lower_lm_cell(c, shape_name, mesh),
+                        seq=shape.seq, kind=shape.kind, per_dev_batch=pdb)
+                rl = Roofline(
+                    flops=cnt["flops"], hbm_bytes=cnt["bytes accessed"],
+                    coll_bytes=cnt["coll"], peak_flops=PEAK_FLOPS,
+                    hbm_bw=HBM_BW, link_bw=ICI_BW)
+                mf = (glm_launch.glm_model_flops(
+                          glm_launch.GLM_CONFIGS[arch], mesh)
+                      if arch.startswith("glm-")
+                      else model_flops(get_config(arch),
+                                       SHAPES[shape_name]) / chips)
+                rec["roofline"] = rl.as_dict()
+                rec["roofline"]["model_flops_per_dev"] = mf
+                rec["roofline"]["model_over_hlo"] = (
+                    mf / rl.flops if rl.flops else float("nan"))
+                rec["counting"] = cnt
+        rl_show = rec.get("roofline", rec["raw_roofline"])
+        print(f"[ ok ] {tag}: lower {rec['t_lower_s']:.0f}s compile "
+              f"{rec['t_compile_s']:.0f}s bottleneck="
+              f"{rl_show['bottleneck']} t=({rl_show['t_compute_s']:.2e},"
+              f"{rl_show['t_memory_s']:.2e},{rl_show['t_collective_s']:.2e})s",
+              flush=True)
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        print(f"[FAIL] {tag}: {type(e).__name__}: {str(e)[:300]}",
+              flush=True)
+    path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="architecture id or glm-criteo|glm-higgs|"
+                         "glm-epsilon (default: all)")
+    ap.add_argument("--shape", default=None,
+                    help="shape name (default: all four)")
+    ap.add_argument("--mesh", default="pod,multipod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-counting", action="store_true")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    archs = (args.arch.split(",") if args.arch else
+             list_archs() + list(glm_launch.GLM_CONFIGS))
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = args.mesh.split(",")
+
+    results = []
+    for arch in archs:
+        cell_shapes = (["epoch"] if arch.startswith("glm-") else shapes)
+        for shape in cell_shapes:
+            for mesh_name in meshes:
+                results.append(run_cell(
+                    arch, shape, mesh_name, out_dir,
+                    args.skip_existing, counting=not args.no_counting))
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped, {n_err} failed "
+          f"of {len(results)} cells")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,401 @@
+"""Distributed GLM training: the paper's algorithm as a 3-axis SPMD program.
+
+shard_map over ("pod","data","model") implements the paper's hierarchy
+with real collectives (DESIGN.md S2):
+
+  * static partition of examples across pods — data never crosses the
+    pod interconnect; only the d-sized v delta does, once per epoch
+    (optionally int8 error-feedback compressed: 4x fewer wire bytes);
+  * DYNAMIC partition within a pod — every epoch each lane shuffles its
+    buckets locally, splits them into K groups and exchanges via ONE
+    balanced all-to-all over 'data', so each new per-lane block mixes
+    buckets from every old block (the TPU-native form of the paper's
+    re-shuffling, O(local data) ICI cost).  NOTE: a cheaper ring
+    rotation of whole blocks was tried first and REFUTED — rotating
+    ownership of fixed blocks leaves the subproblem sets unchanged and
+    converges like static (see core/partition.py + EXPERIMENTS.md);
+  * feature sharding over 'model' (TP) for wide datasets — per-bucket
+    Gram/margin partial sums are psum'd, amortizing ONE model-axis
+    collective over B coordinates (the bucket optimization's TP payoff);
+  * v replicas sync over 'data' once per chunk (sync_interval), so
+    compute and the data-axis psum interleave across chunks.
+
+Workers = pods x data-lanes (x model-lanes too when features are
+replicated — narrow datasets use the whole mesh as example-parallel
+workers).  sigma' = #workers (CoCoA+ additive aggregation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import sdca
+from repro.core.objectives import LOGISTIC, Objective
+from repro.optim.compression import compress
+
+# check_vma=False: v is *mathematically* invariant over unmentioned axes
+# (every lane adds the same psum'd delta to the same replica), but the
+# static VMA tracker cannot see through the chunked carry + the int8
+# all-gather pod reduce, so we assert replication via out_specs instead.
+try:
+    from jax import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+except (ImportError, TypeError):                        # older jax
+    from jax.experimental.shard_map import shard_map as _sm
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class GLMScale:
+    """One deployment-scale GLM workload (paper dataset, full size)."""
+    name: str
+    kind: str                 # dense | sparse
+    n: int
+    d: int
+    nnz: int = 0              # sparse only (padded)
+    bucket: int = 16
+    chunks: int = 4           # v syncs per epoch over 'data'
+    feature_shard: bool = False   # wide dense data: shard d over 'model'
+    lam: float = 1e-3
+    compress_pod: bool = True     # int8 EF for the cross-pod reduce
+    compress_sync: bool = False   # int8 two-phase data-axis dv reduction
+    redeal_frac: float = 1.0      # bucket fraction re-dealt per epoch
+
+
+GLM_CONFIGS = {
+    # criteo-kaggle: 45M examples, 1M features, ~39 nnz (padded to 40)
+    "glm-criteo": GLMScale("glm-criteo", "sparse", n=45_088_768,
+                           d=1_048_576, nnz=40, bucket=16, chunks=4),
+    # HIGGS: 11M examples, 28 dense features — narrow: replicate features,
+    # use every chip as an example-parallel worker
+    "glm-higgs": GLMScale("glm-higgs", "dense", n=11_010_048, d=28,
+                          bucket=8, chunks=4, feature_shard=False),
+    # epsilon: 400k examples, 2000 dense features — wide: TP over 'model'
+    "glm-epsilon": GLMScale("glm-epsilon", "dense", n=409_600, d=2_000,
+                            bucket=16, chunks=8, feature_shard=True),
+    # beyond-paper optimized variant (SPerf glm iteration): int8
+    # two-phase chunk reductions + 25% partial re-deal
+    "glm-criteo-opt": GLMScale("glm-criteo-opt", "sparse", n=45_088_768,
+                               d=1_048_576, nnz=40, bucket=16, chunks=4,
+                               compress_sync=True, redeal_frac=0.25),
+}
+
+
+def _axes(mesh, scale: GLMScale):
+    """-> (example_axes, sync_axes, has_pod, model_is_tp)."""
+    names = mesh.axis_names
+    has_pod = "pod" in names
+    if scale.kind == "dense" and scale.feature_shard:
+        ex = tuple(a for a in ("pod", "data") if a in names)
+        sync = ("data",)
+        tp = True
+    else:
+        ex = tuple(a for a in ("pod", "data", "model") if a in names)
+        sync = tuple(a for a in ("data", "model") if a in names)
+        tp = False
+    return ex, sync, has_pod, tp
+
+
+def _worker_count(mesh, scale: GLMScale) -> int:
+    ex, _, _, _ = _axes(mesh, scale)
+    n = 1
+    for a in ex:
+        n *= mesh.shape[a]
+    return n
+
+
+def _q_psum(x, axis_name: str, size: int):
+    """int8 two-phase reduction over `axis_name` (quantized
+    reduce-scatter then quantized all-gather): ~2 bytes/element on the
+    wire instead of all-reduce's ~8 — the glm-criteo SPerf iteration.
+    """
+    if size <= 1:
+        return x
+    n = x.shape[0]
+    pad = (-n) % size
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    qz, _ = compress(x)
+    # phase 1: exchange int8 shards, sum locally in f32
+    shards = jax.lax.all_to_all(
+        qz.q.reshape(size, -1), axis_name, split_axis=0, concat_axis=0,
+        tiled=False)                                  # (size, n/size)
+    scales = jax.lax.all_gather(qz.scale, axis_name)  # (size,)
+    part = jnp.sum(shards.astype(jnp.float32)
+                   * scales.reshape(size, 1), axis=0)  # my shard, reduced
+    # phase 2: int8 all-gather of the reduced shards
+    qz2, _ = compress(part)
+    q_all = jax.lax.all_gather(qz2.q, axis_name)       # (size, n/size)
+    s_all = jax.lax.all_gather(qz2.scale, axis_name)
+    out = (q_all.astype(jnp.float32)
+           * s_all.reshape(size, 1)).reshape(x.shape)
+    return out[:n] if pad else out
+
+
+def _redeal(arrs, axis_name: str, size: int, nb: int, key,
+            frac: float = 1.0):
+    """Balanced all-to-all bucket re-deal over `axis_name` (the paper's
+    dynamic partitioning, TPU-native).
+
+    arrs: tuple of (array, example_axis); the example axis holds n_local
+    examples grouped in `nb` equal buckets.  Each lane shuffles its
+    buckets locally (per-chip key), then a tiled all-to-all sends the
+    g-th slice to lane g — every new block mixes buckets drawn from
+    every old block.  frac < 1 exchanges only that fraction of buckets
+    (fewer wire bytes, slightly more epochs — fig5a / SPerf).
+    """
+    if size <= 1 or frac <= 0:
+        return tuple(x for x, _ in arrs)
+    perm = jax.random.permutation(key, nb).astype(jnp.int32)
+    exch = max(int(nb * frac) // size * size, size)
+
+    def one(x, example_axis):
+        xb = jnp.moveaxis(x, example_axis, 0)      # (n_local, ...)
+        shp = xb.shape
+        rows = shp[0] // nb
+        xb = xb.reshape((nb, rows) + shp[1:])[perm]
+        head = xb[:exch].reshape((exch * rows,) + shp[1:])
+        head = jax.lax.all_to_all(head, axis_name, split_axis=0,
+                                  concat_axis=0, tiled=True)
+        xb = jnp.concatenate(
+            [head.reshape((exch, rows) + shp[1:]), xb[exch:]], axis=0)
+        return jnp.moveaxis(xb.reshape(shp), 0, example_axis)
+
+    return tuple(one(x, ax) for x, ax in arrs)
+
+
+def _pod_reduce(v_new, v_in, has_pod: bool, compress_pod: bool):
+    """Cross-pod combine of per-pod v deltas (optionally int8 EF)."""
+    if not has_pod:
+        return v_new
+    dv = v_new - v_in
+    if compress_pod:
+        qz, _err = compress(dv)        # EF residual handled by caller state
+        q_all = jax.lax.all_gather(qz.q, "pod")          # int8 on the wire
+        s_all = jax.lax.all_gather(qz.scale, "pod")
+        dv_sum = jnp.sum(q_all.astype(jnp.float32)
+                         * s_all.reshape((-1,) + (1,) * dv.ndim), axis=0)
+    else:
+        dv_sum = jax.lax.psum(dv, "pod")
+    return v_in + dv_sum
+
+
+def make_dense_epoch(scale: GLMScale, mesh, obj: Objective = LOGISTIC):
+    """-> jit-ready epoch fn over global arrays (X, y, alpha, v, epoch)."""
+    ex_axes, sync_axes, has_pod, tp = _axes(mesh, scale)
+    W = _worker_count(mesh, scale)
+    n_local = scale.n // W
+    B = scale.bucket
+    nb_local = n_local // B
+    per_chunk = nb_local // scale.chunks
+    lam_n = scale.lam * scale.n
+    sig = float(W)
+    data_size = mesh.shape.get("data", 1)
+    mesh_ax_size = {a: mesh.shape.get(a, 1) for a in ("data", "model")}
+    model_axis = "model" if tp else None
+
+    def epoch_fn(X, y, a, v, epoch):
+        # X: (d_loc, n_local) f32; y/a: (n_local,); v: (d_loc,)
+        me = sum(jax.lax.axis_index(ax) * 10_007 ** i
+                 for i, ax in enumerate(ex_axes))
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(0), epoch), me)
+        # 1. dynamic partitioning: balanced all-to-all bucket re-deal
+        #    across the pod's lanes (data never leaves the pod)
+        X, y, a = _redeal(((X, 1), (y, 0), (a, 0)), "data", data_size,
+                          nb_local, key, frac=scale.redeal_frac)
+        # 2. per-chip random visit order over the received buckets
+        perm = jax.random.permutation(jax.random.fold_in(key, 1),
+                                      nb_local).astype(jnp.int32)
+        v_in = v
+
+        def chunk(c, carry):
+            a_loc, v_loc = carry
+            ids = jax.lax.dynamic_slice_in_dim(
+                perm, c * per_chunk, per_chunk)
+            cols = (ids[:, None] * B
+                    + jnp.arange(B, dtype=jnp.int32)).reshape(-1)
+            a_new, dv = sdca.dense_local_subepoch(
+                obj, X[:, cols], y[cols], a_loc[cols], v_loc,
+                jnp.asarray(lam_n, X.dtype), jnp.asarray(sig, X.dtype),
+                B, model_axis=model_axis)
+            for ax in sync_axes:
+                if scale.compress_sync:
+                    dv = _q_psum(dv, ax, mesh_ax_size[ax])
+                else:
+                    dv = jax.lax.psum(dv, ax)
+            return a_loc.at[cols].set(a_new), v_loc + dv
+
+        a, v = jax.lax.fori_loop(0, scale.chunks, chunk, (a, v))
+        # 3. hierarchical: per-pod replicas reduced once per epoch
+        v = _pod_reduce(v, v_in, has_pod, scale.compress_pod)
+        return X, y, a, v
+
+    x_spec = P("model" if tp else None, ex_axes)
+    e_spec = P(ex_axes)
+    v_spec = P("model") if tp else P(None)
+    return shard_map(
+        epoch_fn, mesh,
+        in_specs=(x_spec, e_spec, e_spec, v_spec, P()),
+        out_specs=(x_spec, e_spec, e_spec, v_spec))
+
+
+def make_sparse_epoch(scale: GLMScale, mesh, obj: Objective = LOGISTIC):
+    ex_axes, sync_axes, has_pod, _ = _axes(mesh, scale)
+    W = _worker_count(mesh, scale)
+    n_local = scale.n // W
+    B = scale.bucket
+    nb_local = n_local // B
+    per_chunk = nb_local // scale.chunks
+    lam_n = scale.lam * scale.n
+    sig = float(W)
+    data_size = mesh.shape.get("data", 1)
+    mesh_ax_size = {a: mesh.shape.get(a, 1) for a in ("data", "model")}
+
+    def epoch_fn(idx, val, y, a, v, epoch):
+        # idx/val: (n_local, nnz); v: (d,) replicated (gather/scatter)
+        me = sum(jax.lax.axis_index(ax) * 10_007 ** i
+                 for i, ax in enumerate(ex_axes))
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(0), epoch), me)
+        idx, val, y, a = _redeal(
+            ((idx, 0), (val, 0), (y, 0), (a, 0)), "data", data_size,
+            nb_local, key, frac=scale.redeal_frac)
+        perm = jax.random.permutation(jax.random.fold_in(key, 1),
+                                      nb_local).astype(jnp.int32)
+        v_in = v
+
+        def chunk(c, carry):
+            a_loc, v_loc = carry
+            ids = jax.lax.dynamic_slice_in_dim(
+                perm, c * per_chunk, per_chunk)
+            rows = (ids[:, None] * B
+                    + jnp.arange(B, dtype=jnp.int32)).reshape(-1)
+            a_new, dv = sdca.sparse_local_subepoch(
+                obj, idx[rows], val[rows], y[rows], a_loc[rows], v_loc,
+                jnp.asarray(lam_n, val.dtype), jnp.asarray(sig, val.dtype))
+            for ax in sync_axes:
+                if scale.compress_sync:
+                    dv = _q_psum(dv, ax, mesh_ax_size[ax])
+                else:
+                    dv = jax.lax.psum(dv, ax)
+            return a_loc.at[rows].set(a_new), v_loc + dv
+
+        a, v = jax.lax.fori_loop(0, scale.chunks, chunk, (a, v))
+        v = _pod_reduce(v, v_in, has_pod, scale.compress_pod)
+        return idx, val, y, a, v
+
+    r_spec = P(ex_axes, None)
+    e_spec = P(ex_axes)
+    return shard_map(
+        epoch_fn, mesh,
+        in_specs=(r_spec, r_spec, e_spec, e_spec, P(None), P()),
+        out_specs=(r_spec, r_spec, e_spec, e_spec, P(None)))
+
+
+def glm_input_specs(scale: GLMScale, mesh):
+    ex_axes, _, _, tp = _axes(mesh, scale)
+
+    def sds(shape, dtype, spec):
+        return jax.ShapeDtypeStruct(shape, dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    e_spec = P(ex_axes)
+    if scale.kind == "sparse":
+        return (sds((scale.n, scale.nnz), jnp.int32, P(ex_axes, None)),
+                sds((scale.n, scale.nnz), jnp.float32, P(ex_axes, None)),
+                sds((scale.n,), jnp.float32, e_spec),
+                sds((scale.n,), jnp.float32, e_spec),
+                sds((scale.d,), jnp.float32, P(None)),
+                jax.ShapeDtypeStruct((), jnp.int32))
+    x_spec = P("model" if tp else None, ex_axes)
+    v_spec = P("model") if tp else P(None)
+    return (sds((scale.d, scale.n), jnp.float32, x_spec),
+            sds((scale.n,), jnp.float32, e_spec),
+            sds((scale.n,), jnp.float32, e_spec),
+            sds((scale.d,), jnp.float32, v_spec),
+            jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def lower_glm(arch: str, mesh):
+    scale = GLM_CONFIGS[arch]
+    make = make_sparse_epoch if scale.kind == "sparse" else make_dense_epoch
+    epoch = make(scale, mesh)
+    inputs = glm_input_specs(scale, mesh)
+    return jax.jit(epoch, donate_argnums=tuple(range(len(inputs) - 1))) \
+        .lower(*inputs)
+
+
+# ---------------------------------------------------------------------------
+# Analytic per-epoch cost (GLM epochs scan coordinates inside while loops,
+# which XLA:CPU's cost_analysis counts once — see counting.py; the closed
+# form below is exact for this algorithm and is used for the roofline)
+# ---------------------------------------------------------------------------
+
+_BISECT_FLOPS = 40 * 12       # logistic delta: 40 bisection iters
+
+
+def glm_analytic(scale: GLMScale, mesh) -> dict:
+    """Per-device per-epoch {flops, bytes accessed, coll} estimates."""
+    W = _worker_count(mesh, scale)
+    ex_axes, sync_axes, has_pod, tp = _axes(mesh, scale)
+    n_local = scale.n // W
+    B = scale.bucket
+    nb = n_local // B
+    d_loc = scale.d // mesh.shape["model"] if tp else scale.d
+
+    if scale.kind == "dense":
+        # per bucket: margins 2*d_loc*B + Gram d_loc*B^2 + v-update
+        # 2*d_loc*B + recursion B * (B axpy + bisection)
+        per_bucket = (2 * d_loc * B + d_loc * B * B + 2 * d_loc * B
+                      + B * (2 * B + _BISECT_FLOPS))
+        flops = nb * per_bucket
+        x_bytes = d_loc * n_local * 4
+        # X streamed once per chunked pass + rotated once (read+write)
+        bytes_acc = x_bytes * 3 + scale.chunks * d_loc * 4 * 2
+    else:
+        per_coord = (2 * scale.nnz * 3 + _BISECT_FLOPS)
+        flops = n_local * per_coord
+        x_bytes = n_local * scale.nnz * 8
+        bytes_acc = x_bytes * 3 + n_local * scale.nnz * 4 * 2  # v gather/scatter
+
+    # collectives (result-shape convention, per device):
+    #   chunk reductions of dv over sync axes (f32 all-reduce: 4 B/elem;
+    #   int8 two-phase: ~2 B/elem) + the bucket re-deal (all-to-all of
+    #   redeal_frac of the local shard) + cross-pod int8 all-gather
+    sync_bytes = 2 if scale.compress_sync else 4
+    dv_len = scale.d if scale.kind == "sparse" else d_loc
+    coll = scale.chunks * dv_len * sync_bytes * len(sync_axes)
+    coll += (x_bytes + n_local * 4 * 2) * scale.redeal_frac
+    if has_pod:
+        coll += (scale.d if scale.kind == "sparse" else d_loc) * 1 * \
+            mesh.shape.get("pod", 1)               # int8 payload gather
+    return {"flops": float(flops), "bytes accessed": float(bytes_acc),
+            "coll": float(coll), "method": "analytic-closed-form"}
+
+
+def glm_model_flops(scale: GLMScale, mesh) -> float:
+    """Useful work per device-epoch: one pass of coordinate updates.
+
+    For SDCA the 'model flops' are the margin + v-update inner products:
+    4*d*nnz-equivalents per coordinate — the irreducible work of one
+    epoch of the sequential algorithm, divided over chips.
+    """
+    W = _worker_count(mesh, scale)
+    n_local = scale.n // W
+    if scale.kind == "sparse":
+        return float(n_local * 4 * scale.nnz)
+    d_loc = scale.d // mesh.shape["model"] \
+        if scale.feature_shard else scale.d
+    return float(n_local * 4 * d_loc)

@@ -1,0 +1,139 @@
+"""Static analysis of lowered/compiled HLO: collective bytes + roofline.
+
+collective_bytes is not in cost_analysis(), so we parse the
+post-partitioning HLO text and sum the result-shape bytes of every
+collective op.  Shapes in the partitioned module are PER-DEVICE, so the
+sums here are per-device quantities; the roofline terms below divide by
+per-chip bandwidths, which is algebraically identical to the brief's
+global_bytes / (chips * bw).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one result shape: dtype[d0,d1,...] — or a tuple of them
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\((?:[^()]|\([^)]*\))*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(" + "|".join(_COLLECTIVES) + r")(-start)?\(")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes (per device) from HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for m in _OP_RE.finditer(hlo_text):
+        shapes, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(shapes)
+        out["count"] += 1
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Three-term roofline for one compiled (arch x shape x mesh) cell.
+
+    All terms are seconds-per-step for ONE device executing the
+    partitioned module — identical to global work / (chips * rate).
+    """
+    flops: float              # per-device HLO flops
+    hbm_bytes: float          # per-device bytes accessed
+    coll_bytes: float         # per-device collective bytes
+    peak_flops: float
+    hbm_bw: float
+    link_bw: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / self.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / self.link_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Lower bound assuming perfect overlap: max of the three."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_dev": self.flops,
+            "hbm_bytes_per_dev": self.hbm_bytes,
+            "coll_bytes_per_dev": self.coll_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "step_time_lb_s": self.step_time,
+        }
+
+
+def analyze(compiled, *, peak_flops: float, hbm_bw: float,
+            link_bw: float) -> tuple[Roofline, dict]:
+    """-> (Roofline, raw dict) from a compiled executable."""
+    cost = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    coll = collective_bytes(text)
+    total_coll = sum(v for k, v in coll.items() if k != "count")
+    rl = Roofline(
+        flops=float(cost.get("flops", 0.0)),
+        hbm_bytes=float(cost.get("bytes accessed", 0.0)),
+        coll_bytes=float(total_coll),
+        peak_flops=peak_flops, hbm_bw=hbm_bw, link_bw=link_bw)
+    return rl, {"cost_analysis": {k: float(v) for k, v in cost.items()
+                                  if isinstance(v, (int, float))},
+                "collectives": coll}
+
+
+def memory_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes", "serialized_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out

@@ -1,0 +1,152 @@
+"""Input shapes, applicability rules, and ShapeDtypeStruct stand-ins.
+
+Every dry-run cell is (architecture x input shape x mesh).  This module
+owns the four assigned LM shapes, the skip rules (DESIGN.md S4), and the
+construction of weak-type-correct, shardable ShapeDtypeStructs for every
+model input — no device allocation ever happens for the full configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import lm
+
+BATCH = ("pod", "data")      # batch-sharding axes (pod absent on 1-pod mesh)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq: int
+    batch: int
+    kind: str                # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCfg("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524_288, 1, "decode"),
+}
+
+# Architectures whose every token attends over the full context have no
+# sub-quadratic path; the 524k-decode cell is skipped for them per the
+# assignment ("run for SSM/hybrid/linear-attn").
+_SUBQUADRATIC_FAMILIES = ("hybrid", "ssm")
+
+
+def applicable(cfg, shape: ShapeCfg) -> tuple[bool, str]:
+    if shape.name == "long_500k" and cfg.family not in _SUBQUADRATIC_FAMILIES:
+        return False, ("pure full-attention arch: no sub-quadratic path at "
+                       "524k context (skip noted in DESIGN.md S4)")
+    return True, ""
+
+
+def clean_pspec(mesh, spec: P) -> P:
+    """Drop axis names absent from `mesh` (so BATCH works on both meshes)."""
+    names = set(mesh.axis_names)
+
+    def keep(e):
+        if e is None:
+            return None
+        if isinstance(e, (tuple, list)):
+            kept = tuple(a for a in e if a in names)
+            return kept if kept else None
+        return e if e in names else None
+
+    return P(*(keep(e) for e in spec))
+
+
+def _sds(mesh, shape, dtype, spec: P):
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=NamedSharding(mesh, clean_pspec(mesh, spec)))
+
+
+def cache_pspec(shape: tuple, mdiv: int, bdiv: int,
+                stacked: bool = False) -> P:
+    """Sharding rule for one decode-cache tensor.
+
+    Batch (dim 0 after any stacking dim) shards over ('pod','data') when
+    divisible.  One feature-ish dim shards over 'model': prefer the
+    heads/latent dim (index 2+) over the last dim; never shard the
+    sequence dim of a (B, S, ...) cache; 2-D (B, feat) caches shard feat.
+    """
+    lead = (None,) if stacked else ()
+    shp = shape[1:] if stacked else shape
+    entries = [BATCH if shp[0] % bdiv == 0 else None] + \
+        [None] * (len(shp) - 1)
+    candidates = list(range(2, len(shp))) if len(shp) > 2 else \
+        ([1] if len(shp) == 2 else [])
+    for i in candidates:
+        if shp[i] % mdiv == 0 and shp[i] >= mdiv:
+            entries[i] = "model"
+            break
+    return P(*(lead + tuple(entries)))
+
+
+def cache_specs(cfg, mesh, batch: int, max_seq: int):
+    """ShapeDtypeStructs (with shardings) for the decode cache."""
+    shapes = lm.cache_shapes(cfg, batch, max_seq)
+    mdiv = mesh.shape.get("model", 1)
+    bdiv = mesh.shape.get("pod", 1) * mesh.shape.get("data", 1)
+
+    def map_tree(tree, stacked):
+        return jax.tree.map(
+            lambda s: _sds(mesh, s.shape, s.dtype,
+                           cache_pspec(s.shape, mdiv, bdiv, stacked)),
+            tree)
+
+    return {
+        "head": [map_tree(c, False) for c in shapes["head"]],
+        "blocks": map_tree(shapes["blocks"], True),
+        "tail": [map_tree(c, False) for c in shapes["tail"]],
+    }
+
+
+def input_specs(cfg, shape: ShapeCfg, mesh):
+    """-> dict of ShapeDtypeStructs for one (arch x shape) cell.
+
+    train:   {tokens, labels [, frames | patches]}
+    prefill: {tokens [, frames | patches]}
+    decode:  {tokens(B,1), cache, pos}   (cross caches hold encoder state)
+    """
+    B, S = shape.batch, shape.seq
+    baxes = cfg.batch_axes if shape.kind == "train" else BATCH
+    bdiv = 1
+    for a in (baxes if isinstance(baxes, tuple) else (baxes,)):
+        bdiv *= mesh.shape.get(a, 1)
+    bspec = baxes if B % bdiv == 0 else None   # batch=1 cells replicate
+    tok = lambda b, s: _sds(mesh, (b, s), jnp.int32, P(bspec, None))
+    frames = lambda: _sds(mesh, (B, cfg.enc_seq, cfg.d_model),
+                          jnp.float32, P(bspec, None, None))
+    patches = lambda s_tok: _sds(mesh, (B, cfg.n_patches, cfg.d_model),
+                                 jnp.float32, P(bspec, None, None))
+
+    if shape.kind == "train":
+        out = {"tokens": tok(B, S), "labels": tok(B, S)}
+        if cfg.frontend == "vision":
+            s_tok = S - cfg.n_patches
+            out = {"tokens": tok(B, s_tok), "labels": tok(B, s_tok),
+                   "patches": patches(s_tok)}
+        if cfg.frontend == "audio":
+            out["frames"] = frames()
+        return out
+
+    if shape.kind == "prefill":
+        out = {"tokens": tok(B, S)}
+        if cfg.frontend == "vision":
+            out = {"tokens": tok(B, S - cfg.n_patches),
+                   "patches": patches(S - cfg.n_patches)}
+        if cfg.frontend == "audio":
+            out["frames"] = frames()
+        return out
+
+    # decode: one new token against a seq_len-sized cache.  Encoder
+    # output lives in the cross caches, so no frames input.
+    return {"tokens": tok(B, 1),
+            "cache": cache_specs(cfg, mesh, B, S),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}

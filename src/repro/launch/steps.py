@@ -1,0 +1,229 @@
+"""jit-able train / prefill / decode steps for every architecture.
+
+These are the functions the launcher runs and the dry-run lowers: pure
+(params, opt_state, batch) -> (params, opt_state, metrics) and the
+serving equivalents.  Sharding comes from ParamSpec pspecs (+ the FSDP
+transform for the big archs) on the inputs; out_shardings pin outputs to
+the same layout so steps chain without resharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import lm
+from repro.models.layers import ParamSpec, materialize, pspecs_of
+from repro.optim import adamw
+from .specs import clean_pspec
+
+Array = jax.Array
+
+# params below this size are never FSDP-sharded (norms, biases, routers)
+_FSDP_MIN_SIZE = 1 << 22
+
+
+def fsdp_spec(s: ParamSpec, data_div: int,
+              axes: tuple = ("data",)) -> ParamSpec:
+    """Additionally shard the largest replicated dim over `axes`.
+
+    Skips specs that already use any of `axes` (EP expert weights) and
+    small params (norms, routers)."""
+    import numpy as np
+    if int(np.prod(s.shape)) < _FSDP_MIN_SIZE or len(s.shape) < 2:
+        return s
+    flat_axes = [a for e in s.pspec if e is not None
+                 for a in (e if isinstance(e, tuple) else (e,))]
+    if any(a in flat_axes for a in axes):
+        return s
+    entries = list(s.pspec) + [None] * (len(s.shape) - len(s.pspec))
+    cands = [i for i, (e, dim) in enumerate(zip(entries, s.shape))
+             if e is None and dim % data_div == 0 and dim >= data_div]
+    if not cands:
+        return s
+    # largest replicated dim.  (A prefer-the-output-dim variant was
+    # tried and REFUTED: under the fsdp layout it pushed GSPMD into
+    # "involuntary full rematerialization" — f32 all-gathers of GLOBAL
+    # activations, 441 s/step of collective time on granite/internlm2.
+    # See EXPERIMENTS.md SPerf iteration 3.)
+    best = max(cands, key=lambda i: s.shape[i])
+    entries[best] = axes if len(axes) > 1 else axes[0]
+    return dataclasses.replace(s, pspec=P(*entries))
+
+
+def _strip_model(s: ParamSpec) -> ParamSpec:
+    """fsdp layout: drop 'model' from param pspecs (no TP — the model
+    axis becomes extra batch parallelism)."""
+    def keep(e):
+        if e is None:
+            return None
+        if isinstance(e, (tuple, list)):
+            kept = tuple(a for a in e if a != "model")
+            return kept if kept else None
+        return None if e == "model" else e
+
+    return dataclasses.replace(s, pspec=P(*(keep(e) for e in s.pspec)))
+
+
+def model_param_specs(cfg, mesh=None):
+    """Param specs with the arch's ZeRO policy applied.
+
+    zero3: shard big params over 'data' too (XLA re-gathers per layer —
+           lowest memory, highest collective volume).
+    zero1: params stay TP-only; ONLY the optimizer states shard over
+           'data' (see opt_state_specs) — one grad all-reduce + one
+           update all-gather per STEP instead of per-layer gathers.
+           This is the measured winner for the 20B dense models
+           (EXPERIMENTS.md SPerf iteration 1).
+    """
+    specs = lm.param_specs(cfg)
+    if mesh is None:
+        return specs
+    if cfg.layout == "fsdp":
+        div = mesh.shape.get("data", 1) * mesh.shape.get("model", 1)
+        specs = jax.tree.map(_strip_model, specs,
+                             is_leaf=lambda x: isinstance(x, ParamSpec))
+        return jax.tree.map(
+            lambda s: fsdp_spec(s, div, axes=("data", "model")), specs,
+            is_leaf=lambda x: isinstance(x, ParamSpec))
+    if cfg.zero_stage == "zero3":
+        data_div = mesh.shape.get("data", 1)
+        if data_div > 1:
+            specs = jax.tree.map(
+                lambda s: fsdp_spec(s, data_div), specs,
+                is_leaf=lambda x: isinstance(x, ParamSpec))
+    return specs
+
+
+def opt_state_specs(cfg, mesh):
+    """ParamSpecs for optimizer moments (ZeRO-1: extra 'data' sharding)."""
+    specs = model_param_specs(cfg, mesh)
+    if cfg.zero_stage == "zero1" and cfg.layout != "fsdp":
+        data_div = mesh.shape.get("data", 1) if mesh is not None else 1
+        if data_div > 1:
+            specs = jax.tree.map(
+                lambda s: fsdp_spec(s, data_div), specs,
+                is_leaf=lambda x: isinstance(x, ParamSpec))
+    return specs
+
+
+def abstract_params(cfg, mesh):
+    specs = model_param_specs(cfg, mesh)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, s.dtype,
+            sharding=NamedSharding(mesh, clean_pspec(mesh, s.pspec))),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def abstract_opt_state(cfg, mesh, opt_cfg: adamw.AdamWConfig):
+    """AdamW moments with the ZeRO-1/3 sharding policy applied."""
+    o_specs = opt_state_specs(cfg, mesh)
+
+    def mom(s: ParamSpec):
+        sh = NamedSharding(mesh, clean_pspec(mesh, s.pspec))
+        if opt_cfg.state_dtype == "int8":
+            return adamw.QMoment(
+                q=jax.ShapeDtypeStruct(s.shape, jnp.int8, sharding=sh),
+                scale=jax.ShapeDtypeStruct(
+                    s.shape[:-1] + (1,), jnp.float32,
+                    sharding=NamedSharding(
+                        mesh, clean_pspec(
+                            mesh, P(*(list(s.pspec)[:len(s.shape) - 1]
+                                      + [None]))))))
+        return jax.ShapeDtypeStruct(s.shape, opt_cfg.state_dtype,
+                                    sharding=sh)
+
+    m = jax.tree.map(mom, o_specs,
+                     is_leaf=lambda x: isinstance(x, ParamSpec))
+    return adamw.AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32), mu=m,
+        nu=jax.tree.map(lambda s: s, m,
+                        is_leaf=lambda x: isinstance(x, adamw.QMoment)))
+
+
+def make_opt_cfg(cfg) -> adamw.AdamWConfig:
+    state_dtype = {"bf16": jnp.bfloat16, "int8": "int8"}.get(
+        cfg.opt_dtype, jnp.float32)
+    return adamw.AdamWConfig(state_dtype=state_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Forward wrappers (modality stubs resolved here)
+# ---------------------------------------------------------------------------
+
+def _full_forward(params, batch, cfg, mode):
+    enc_out = None
+    extra = None
+    if cfg.frontend == "audio":
+        enc_out = lm.encoder_fwd(params, batch["frames"], cfg)
+    if cfg.frontend == "vision":
+        extra = batch["patches"]
+    logits, cache = lm.forward(params, batch["tokens"], cfg, mode=mode,
+                               enc_out=enc_out, extra_embeds=extra)
+    return logits, cache
+
+
+def loss_fn(params, batch, cfg):
+    logits, _ = _full_forward(params, batch, cfg, "train")
+    if cfg.frontend == "vision":
+        npch = cfg.n_patches
+        logits = logits[:, npch - 1:-1] if npch else logits
+    return lm.lm_loss(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg, opt_cfg: adamw.AdamWConfig | None = None):
+    opt_cfg = opt_cfg or make_opt_cfg(cfg)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch, cfg)
+        params, opt_state, metrics = adamw.apply(
+            params, grads, opt_state, opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, batch):
+        logits, cache = _full_forward(params, batch, cfg, "prefill")
+        return logits[:, -1:], cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    def decode_step(params, batch):
+        logits, cache = lm.forward(
+            params, batch["tokens"], cfg, mode="decode",
+            cache=batch["cache"], pos=batch["pos"])
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return decode_step
+
+
+def step_for(cfg, kind: str):
+    return {"train": make_train_step, "prefill": make_prefill_step,
+            "decode": make_decode_step}[kind](cfg)
+
+
+def init_params(cfg, key, mesh=None):
+    """Materialize real (small/smoke) params, optionally sharded."""
+    specs = model_param_specs(cfg, mesh)
+    params = materialize(specs, key)
+    if mesh is not None:
+        params = jax.tree.map(
+            lambda x, s: jax.device_put(
+                x, NamedSharding(mesh, clean_pspec(mesh, s.pspec))),
+            params, specs)
+    return params

@@ -1,0 +1,301 @@
+"""Attention variants: GQA/MQA full, sliding-window (local), MLA, cross.
+
+All softmax math in f32.  Prefill/training uses an online-softmax blocked
+formulation (lax.scan over KV chunks) so the 32k-prefill cells never
+materialize (S x S) score tensors.  Decode is one-token with a KV cache.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import ParamSpec, apply_rope
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Blocked (online-softmax) grouped attention core
+# ---------------------------------------------------------------------------
+
+def attention(q: Array, k: Array, v: Array, *, q_positions: Array,
+              kind: str = "causal", window: int = 0,
+              kv_len: Optional[Array] = None, chunk: int = 512,
+              use_flash: bool = True) -> Array:
+    """Dispatch: Pallas flash kernel on TPU (tile-skipped causal, VMEM
+    online softmax — see kernels/flash_attention.py), jnp blocked
+    online-softmax elsewhere (and under cross-attention padding masks,
+    which the kernel does not need: it masks by true kv length)."""
+    if use_flash and jax.default_backend() == "tpu" and kv_len is None:
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, kind=kind, window=window)
+    return blocked_attention(q, k, v, q_positions=q_positions, kind=kind,
+                             window=window, kv_len=kv_len, chunk=chunk)
+
+
+def blocked_attention(q: Array, k: Array, v: Array, *,
+                      q_positions: Array, kind: str = "causal",
+                      window: int = 0, kv_len: Optional[Array] = None,
+                      chunk: int = 512) -> Array:
+    """q: (B, Sq, H, hd); k/v: (B, Sk, Hkv, hd); grouped heads (H % Hkv == 0).
+
+    kind: causal | local (causal within `window`) | full (bidirectional).
+    kv_len: optional (B,) valid KV length (cross attention padding).
+    Returns (B, Sq, H, hd).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]          # may differ from hd (MLA: qk=nope+rope, v=vd)
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd).astype(jnp.float32)
+    scale = hd ** -0.5
+    chunk = min(chunk, Sk)
+    if Sk % chunk:              # pad KV to a chunk multiple; mask the tail
+        pad = chunk - Sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if kv_len is None:
+            kv_len = jnp.full((B,), Sk, jnp.int32)
+        Sk = Sk + pad
+    n_chunks = Sk // chunk
+
+    kc = k.reshape(B, n_chunks, chunk, Hkv, hd)
+    vc = v.reshape(B, n_chunks, chunk, Hkv, hd_v)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, c_idx = inp
+        kpos = c_idx * chunk + jnp.arange(chunk)            # (chunk,)
+        s = jnp.einsum("bqkgh,bckh->bkgqc", qg,
+                       kb.astype(jnp.float32)) * scale      # (B,Hkv,G,Sq,c)
+        if kind == "causal":
+            ok = q_positions[:, None] >= kpos[None, :]
+        elif kind == "local":
+            dist = q_positions[:, None] - kpos[None, :]
+            ok = (dist >= 0) & (dist < window)
+        else:
+            ok = jnp.ones((Sq, chunk), bool)
+        ok = jnp.broadcast_to(ok, (B, Sq, chunk))
+        if kv_len is not None:
+            ok = ok & (kpos[None, None, :] < kv_len[:, None, None])
+        s = jnp.where(ok[:, None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqc,bckh->bkgqh", p, vb.astype(jnp.float32))
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, hd_v), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+         jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd_v).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA / MQA / local attention layer
+# ---------------------------------------------------------------------------
+
+def gqa_specs(cfg, *, cross: bool = False) -> dict:
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    sp = {
+        "wq": ParamSpec((d, H * hd), P(None, "model")),
+        "wk": ParamSpec((d, Hkv * hd), P(None, "model")),
+        "wv": ParamSpec((d, Hkv * hd), P(None, "model")),
+        "wo": ParamSpec((H * hd, d), P("model", None)),
+    }
+    return sp
+
+
+def gqa_fwd(p: dict, x: Array, cfg, *, positions: Array,
+            kind: str = "causal", kv_x: Optional[Array] = None,
+            use_rope: bool = True) -> Array:
+    """Full-sequence forward (training / prefill).  kv_x for cross-attn."""
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    src = x if kv_x is None else kv_x
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (src @ p["wk"]).reshape(B, src.shape[1], Hkv, hd)
+    v = (src @ p["wv"]).reshape(B, src.shape[1], Hkv, hd)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        if kv_x is None:
+            k = apply_rope(k, positions, cfg.rope_theta)
+    out = attention(q, k, v, q_positions=positions, kind=kind,
+                    window=cfg.window, chunk=cfg.attn_chunk)
+    return out.reshape(B, S, H * hd) @ p["wo"]
+
+
+def gqa_cache_shape(cfg, batch: int, max_seq: int) -> dict:
+    Hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    shp = (batch, max_seq, Hkv, hd)
+    return {"k": jax.ShapeDtypeStruct(shp, jnp.bfloat16),
+            "v": jax.ShapeDtypeStruct(shp, jnp.bfloat16)}
+
+
+def gqa_decode(p: dict, x: Array, cache: dict, cfg, *, pos: Array,
+               kind: str = "causal", use_rope: bool = True
+               ) -> tuple[Array, dict]:
+    """x: (B, 1, d); cache k/v: (B, Smax, Hkv, hd); pos: scalar int32.
+
+    Local attention uses a RING cache: when Smax <= window the slot is
+    pos % Smax and the ring itself enforces the window (O(window) memory
+    at any context length); a larger cache falls back to masked lookup.
+    """
+    B, _, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    Smax = cache["k"].shape[1]
+    ring = kind == "local" and Smax <= cfg.window
+    q = (x @ p["wq"]).reshape(B, 1, H, hd)
+    k = (x @ p["wk"]).reshape(B, 1, Hkv, hd)
+    v = (x @ p["wv"]).reshape(B, 1, Hkv, hd)
+    if use_rope:
+        pp = pos[None] if pos.ndim == 0 else pos
+        q = apply_rope(q, pp.reshape(1, 1), cfg.rope_theta)
+        k = apply_rope(k, pp.reshape(1, 1), cfg.rope_theta)
+    slot = jax.lax.rem(pos, Smax) if ring else pos
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+
+    kpos = jnp.arange(Smax)
+    # ring: every slot holds one of the last Smax(<=window) keys once
+    # pos >= Smax-1, and `kpos <= pos` is then all-true; before that,
+    # slots above pos are unwritten and masked — same predicate.
+    ok = kpos <= pos
+    if kind == "local" and not ring:
+        ok &= kpos > pos - cfg.window
+    qg = q.reshape(B, Hkv, H // Hkv, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg,
+                   ck.astype(jnp.float32)) * (hd ** -0.5)
+    s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", w, cv.astype(jnp.float32))
+    o = o.reshape(B, 1, H * hd).astype(x.dtype)
+    return o @ p["wo"], {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, DeepSeek-V2 / MiniCPM3)
+# ---------------------------------------------------------------------------
+
+def mla_specs(cfg) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvr, qr = cfg.kv_lora_rank, cfg.q_lora_rank
+    sp = {
+        "wkv_a": ParamSpec((d, kvr + rd), P(None, None)),
+        "kv_norm": ParamSpec((kvr,), P(None), jnp.float32, "ones"),
+        "wkv_b": ParamSpec((kvr, H * (nd + vd)), P(None, "model")),
+        "wo": ParamSpec((H * vd, d), P("model", None)),
+    }
+    if qr:
+        sp["wq_a"] = ParamSpec((d, qr), P(None, None))
+        sp["q_norm"] = ParamSpec((qr,), P(None), jnp.float32, "ones")
+        sp["wq_b"] = ParamSpec((qr, H * (nd + rd)), P(None, "model"))
+    else:
+        sp["wq"] = ParamSpec((d, H * (nd + rd)), P(None, "model"))
+    return sp
+
+
+def _mla_q(p, x, cfg):
+    from .layers import rmsnorm
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nd, rd = cfg.qk_nope_dim, cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        q = rmsnorm(x @ p["wq_a"], p["q_norm"]) @ p["wq_b"]
+    else:
+        q = x @ p["wq"]
+    return q.reshape(B, S, H, nd + rd)
+
+
+def mla_fwd(p: dict, x: Array, cfg, *, positions: Array) -> Array:
+    """Training/prefill: materialize per-head K/V from the latent."""
+    from .layers import rmsnorm
+    B, S, d = x.shape
+    H = cfg.n_heads
+    nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+
+    q = _mla_q(p, x, cfg)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = x @ p["wkv_a"]                              # (B,S,kvr+rd)
+    c_kv = rmsnorm(kv_a[..., :kvr], p["kv_norm"])
+    k_rope = apply_rope(kv_a[..., kvr:][:, :, None, :], positions,
+                        cfg.rope_theta)                # (B,S,1,rd) shared
+    kv = (c_kv @ p["wkv_b"]).reshape(B, S, H, nd + vd)
+    k_nope, v = kv[..., :nd], kv[..., nd:]
+
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kf = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, rd))], axis=-1)
+    # match standard MLA scaling: 1/sqrt(nd + rd)
+    out = attention(qf, kf, v, q_positions=positions, kind="causal",
+                    chunk=cfg.attn_chunk)
+    return out.reshape(B, S, H * vd) @ p["wo"]
+
+
+def mla_cache_shape(cfg, batch: int, max_seq: int) -> dict:
+    return {
+        "c_kv": jax.ShapeDtypeStruct(
+            (batch, max_seq, cfg.kv_lora_rank), jnp.bfloat16),
+        "k_rope": jax.ShapeDtypeStruct(
+            (batch, max_seq, cfg.qk_rope_dim), jnp.bfloat16),
+    }
+
+
+def mla_decode(p: dict, x: Array, cache: dict, cfg, *, pos: Array
+               ) -> tuple[Array, dict]:
+    """Latent (absorbed) decode: attention runs in the kv_lora space."""
+    from .layers import rmsnorm
+    B, _, d = x.shape
+    H = cfg.n_heads
+    nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    Smax = cache["c_kv"].shape[1]
+
+    q = _mla_q(p, x, cfg)                                # (B,1,H,nd+rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    pp = pos.reshape(1, 1)
+    q_rope = apply_rope(q_rope, pp, cfg.rope_theta)
+
+    kv_a = x @ p["wkv_a"]
+    c_new = rmsnorm(kv_a[..., :kvr], p["kv_norm"])       # (B,1,kvr)
+    kr_new = apply_rope(kv_a[..., kvr:][:, :, None, :], pp,
+                        cfg.rope_theta)[:, :, 0, :]      # (B,1,rd)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1)
+
+    wkv_b = p["wkv_b"].reshape(kvr, H, nd + vd)
+    w_uk, w_uv = wkv_b[..., :nd], wkv_b[..., nd:]        # (kvr,H,nd/vd)
+    # absorb W_uk into q: q_lat (B,H,kvr)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    s = (jnp.einsum("bhr,bsr->bhs", q_lat,
+                    c_kv.astype(jnp.float32))
+         + jnp.einsum("bhr,bsr->bhs", q_rope[:, 0].astype(jnp.float32),
+                      k_rope.astype(jnp.float32)))
+    s *= (nd + rd) ** -0.5
+    ok = jnp.arange(Smax) <= pos
+    s = jnp.where(ok[None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", w, c_kv.astype(jnp.float32))
+    o = jnp.einsum("bhr,rhv->bhv", o_lat, w_uv.astype(jnp.float32))
+    o = o.reshape(B, 1, H * vd).astype(x.dtype)
+    return o @ p["wo"], {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,130 @@
+"""Shared building blocks: param specs, norms, MLPs, embeddings, RoPE."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Parameter specification: one source of truth for shapes, dtypes, sharding
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    pspec: P
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"       # normal | zeros | ones
+    scale: float | None = None  # stddev; default 1/sqrt(fan_in)
+
+    def initializer(self, key: Array) -> Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        fan_in = self.shape[0] if len(self.shape) > 1 else self.shape[-1]
+        std = self.scale if self.scale is not None else 1.0 / math.sqrt(fan_in)
+        return (jax.random.normal(key, self.shape, jnp.float32)
+                * std).astype(self.dtype)
+
+
+def materialize(specs, key: Array):
+    """specs: pytree of ParamSpec -> pytree of initialized arrays."""
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [s.initializer(k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract(specs, mesh=None):
+    """specs -> pytree of ShapeDtypeStruct (with NamedSharding if mesh)."""
+    from jax.sharding import NamedSharding
+
+    def conv(s: ParamSpec):
+        if mesh is None:
+            return jax.ShapeDtypeStruct(s.shape, s.dtype)
+        return jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                    sharding=NamedSharding(mesh, s.pspec))
+    return jax.tree.map(conv, specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def pspecs_of(specs):
+    """specs -> pytree of PartitionSpec (for in_shardings)."""
+    return jax.tree.map(lambda s: s.pspec, specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / MLP
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: Array, gamma: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return ((xf * scale) * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x: Array, gamma: Array, beta: Array,
+              eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)
+            + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+def act_fn(name: str) -> Callable[[Array], Array]:
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+def mlp_specs(d: int, ff: int, *, gated: bool = True,
+              dtype=jnp.bfloat16) -> dict:
+    """SwiGLU (gated) or plain 2-layer MLP.  TP: ff sharded over 'model'."""
+    sp = {"w_up": ParamSpec((d, ff), P(None, "model"), dtype),
+          "w_down": ParamSpec((ff, d), P("model", None), dtype)}
+    if gated:
+        sp["w_gate"] = ParamSpec((d, ff), P(None, "model"), dtype)
+    return sp
+
+
+def mlp_apply(p: dict, x: Array, act: str = "silu") -> Array:
+    a = act_fn(act)
+    if "w_gate" in p:
+        h = a(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = a(x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 1e4) -> Array:
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]                             # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

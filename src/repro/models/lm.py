@@ -1,0 +1,472 @@
+"""LM assembly: block patterns, scan-over-layers, train/prefill/decode.
+
+Layer stacking: each architecture is described by a repeating block
+pattern (e.g. ("rec","rec","attn") for RecurrentGemma's 1:2 ratio).  The
+repeated section is stacked and driven by jax.lax.scan (compact HLO,
+essential for 61-layer dry-run compiles); non-repeating head/tail layers
+are unrolled.  The scan body is wrapped in jax.checkpoint (remat) for
+training.
+
+Modes:
+  train   — full-sequence forward, logits + CE loss
+  prefill — full-sequence forward that also materializes the KV/state
+            caches (the inference-prefill dry-run cells)
+  decode  — one token against a seq_len cache (inference-decode cells)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import attention as attn
+from . import moe as moe_lib
+from . import recurrent as rec
+from .layers import ParamSpec, act_fn, layernorm, mlp_apply, mlp_specs, rmsnorm
+
+Array = jax.Array
+BATCH_AXES = ("pod", "data")
+
+
+# ---------------------------------------------------------------------------
+# Pattern derivation
+# ---------------------------------------------------------------------------
+
+def layer_layout(cfg) -> tuple[list[str], list[str], int, list[str]]:
+    """-> (head_kinds, pattern, n_rep, tail_kinds)."""
+    if cfg.is_encoder_decoder:
+        return [], ["xattn"], cfg.n_layers, []
+    if cfg.block_pattern:
+        pat = list(cfg.block_pattern)
+        n_rep, rem = divmod(cfg.n_layers, len(pat))
+        return [], pat, n_rep, pat[:rem]
+    if cfg.n_experts:
+        fd = cfg.first_dense_layers
+        return ["attn"] * fd, ["moe"], cfg.n_layers - fd, []
+    return [], ["attn"], cfg.n_layers, []
+
+
+# ---------------------------------------------------------------------------
+# Per-block specs / apply
+# ---------------------------------------------------------------------------
+
+def _norm_specs(cfg, d=None):
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"g": ParamSpec((d,), P(None), jnp.float32, "ones"),
+                "b": ParamSpec((d,), P(None), jnp.float32, "zeros")}
+    return {"g": ParamSpec((d,), P(None), jnp.float32, "ones")}
+
+
+def _norm(p, x, cfg):
+    if "b" in p:
+        return layernorm(x, p["g"], p["b"])
+    return rmsnorm(x, p["g"])
+
+
+def _attn_specs(cfg):
+    return attn.mla_specs(cfg) if cfg.attention == "mla" \
+        else attn.gqa_specs(cfg)
+
+
+def block_specs(cfg, kind: str) -> dict:
+    sp: dict[str, Any] = {"ln1": _norm_specs(cfg)}
+    if kind in ("attn", "attn_local", "enc_attn"):
+        sp["attn"] = _attn_specs(cfg)
+        sp["ln2"] = _norm_specs(cfg)
+        sp["mlp"] = mlp_specs(cfg.d_model, cfg.d_ff, gated=cfg.gated_mlp)
+    elif kind == "moe":
+        sp["attn"] = _attn_specs(cfg)
+        sp["ln2"] = _norm_specs(cfg)
+        sp["moe"] = moe_lib.moe_specs(cfg)
+    elif kind == "xattn":            # decoder block with cross-attention
+        sp["attn"] = _attn_specs(cfg)
+        sp["ln_x"] = _norm_specs(cfg)
+        sp["xattn"] = attn.gqa_specs(cfg, cross=True)
+        sp["ln2"] = _norm_specs(cfg)
+        sp["mlp"] = mlp_specs(cfg.d_model, cfg.d_ff, gated=cfg.gated_mlp)
+    elif kind == "rec":
+        sp["rec"] = rec.rglru_block_specs(cfg)
+        sp["ln2"] = _norm_specs(cfg)
+        sp["mlp"] = mlp_specs(cfg.d_model, cfg.d_ff, gated=cfg.gated_mlp)
+    elif kind == "mlstm":
+        sp["core"] = rec.mlstm_specs(cfg)
+    elif kind == "slstm":
+        sp["core"] = rec.slstm_specs(cfg)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    return sp
+
+
+def block_cache_shape(cfg, kind: str, batch: int, max_seq: int) -> dict:
+    if kind in ("attn", "attn_local", "moe"):
+        if cfg.attention == "mla":
+            return attn.mla_cache_shape(cfg, batch, max_seq)
+        if kind == "attn_local" or (kind == "attn"
+                                    and cfg.attention == "local"):
+            # ring buffer: local attention only ever sees the last
+            # `window` keys, so the cache is O(window) not O(seq) —
+            # this is what makes 524k-context decode feasible.
+            return attn.gqa_cache_shape(cfg, batch,
+                                        min(cfg.window, max_seq))
+        return attn.gqa_cache_shape(cfg, batch, max_seq)
+    if kind == "xattn":
+        c = attn.gqa_cache_shape(cfg, batch, max_seq)
+        enc = attn.gqa_cache_shape(cfg, batch, cfg.enc_seq)
+        return {"self": c, "cross_k": enc["k"], "cross_v": enc["v"]}
+    if kind == "rec":
+        return rec.rglru_cache_shape(cfg, batch)
+    if kind == "mlstm":
+        return rec.mlstm_cache_shape(cfg, batch)
+    if kind == "slstm":
+        return rec.slstm_cache_shape(cfg, batch)
+    raise ValueError(kind)
+
+
+def _attn_kind(cfg, kind: str) -> str:
+    if kind == "enc_attn":
+        return "full"
+    if kind == "attn_local":
+        return "local"
+    if kind == "attn" and cfg.attention == "local":
+        return "local"
+    return "causal"
+
+
+def apply_block(p: dict, x: Array, cfg, kind: str, *, positions=None,
+                mode: str = "train", cache=None, pos=None, enc_out=None):
+    """Returns (x_new, new_cache)."""
+    h = _norm(p["ln1"], x, cfg)
+    new_cache = cache
+
+    if kind in ("attn", "attn_local", "moe", "enc_attn", "xattn"):
+        akind = _attn_kind(cfg, kind)
+        if mode == "decode":
+            if cfg.attention == "mla":
+                a, new_cache = attn.mla_decode(p["attn"], h, cache
+                                               if kind != "xattn"
+                                               else cache["self"],
+                                               cfg, pos=pos)
+            else:
+                c = cache if kind != "xattn" else cache["self"]
+                a, c_new = attn.gqa_decode(p["attn"], h, c, cfg, pos=pos,
+                                           kind=akind,
+                                           use_rope=cfg.use_rope)
+                new_cache = c_new
+            if kind == "xattn":
+                new_cache = dict(cache, self=new_cache)
+        else:
+            if cfg.attention == "mla":
+                a = attn.mla_fwd(p["attn"], h, cfg, positions=positions)
+            else:
+                a = attn.gqa_fwd(p["attn"], h, cfg, positions=positions,
+                                 kind=akind, use_rope=cfg.use_rope)
+            if mode == "prefill":
+                new_cache = _prefill_cache(p["attn"], h, cfg, positions)
+                if kind == "xattn":
+                    new_cache = {"self": new_cache}
+        x = x + a
+        if kind == "xattn":
+            hx = _norm(p["ln_x"], x, cfg)
+            if mode == "decode":
+                B = x.shape[0]
+                H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+                q = (hx @ p["xattn"]["wq"]).reshape(B, 1, H, hd)
+                ck, cv = cache["cross_k"], cache["cross_v"]
+                qg = q.reshape(B, Hkv, H // Hkv, hd).astype(jnp.float32)
+                s = jnp.einsum("bkgh,bskh->bkgs", qg,
+                               ck.astype(jnp.float32)) * (hd ** -0.5)
+                w = jax.nn.softmax(s, axis=-1)
+                o = jnp.einsum("bkgs,bskh->bkgh", w,
+                               cv.astype(jnp.float32))
+                a = o.reshape(B, 1, H * hd).astype(x.dtype) \
+                    @ p["xattn"]["wo"]
+            else:
+                a = attn.gqa_fwd(p["xattn"], hx, cfg, positions=positions,
+                                 kind="full", kv_x=enc_out, use_rope=False)
+                if mode == "prefill":
+                    B = x.shape[0]
+                    Hkv, hd = cfg.n_kv_heads, cfg.head_dim
+                    Se = enc_out.shape[1]
+                    ck = (enc_out @ p["xattn"]["wk"]).reshape(
+                        B, Se, Hkv, hd).astype(jnp.bfloat16)
+                    cv = (enc_out @ p["xattn"]["wv"]).reshape(
+                        B, Se, Hkv, hd).astype(jnp.bfloat16)
+                    new_cache = dict(new_cache, cross_k=ck, cross_v=cv)
+            x = x + a
+        h2 = _norm(p["ln2"], x, cfg)
+        if kind == "moe":
+            f = moe_lib.moe_apply(p["moe"], h2, cfg, act=cfg.act)
+        else:
+            f = mlp_apply(p["mlp"], h2, cfg.act)
+        return x + f, new_cache
+
+    if kind == "rec":
+        if mode == "decode":
+            r, new_cache = rec.rglru_block_decode(p["rec"], h, cache, cfg)
+        else:
+            r = rec.rglru_block_fwd(p["rec"], h, cfg)
+            if mode == "prefill":
+                new_cache = _rec_prefill_cache(p["rec"], h, cfg)
+        x = x + r
+        h2 = _norm(p["ln2"], x, cfg)
+        return x + mlp_apply(p["mlp"], h2, cfg.act), new_cache
+
+    if kind in ("mlstm", "slstm"):
+        mod = rec.mlstm_decode if kind == "mlstm" else rec.slstm_decode
+        fwd = rec.mlstm_fwd if kind == "mlstm" else rec.slstm_fwd
+        if mode == "decode":
+            r, new_cache = mod(p["core"], h, cache, cfg)
+        else:
+            r = fwd(p["core"], h, cfg)
+            if mode == "prefill":
+                new_cache = _xlstm_prefill_cache(p["core"], h, cfg, kind)
+        return x + r, new_cache
+
+    raise ValueError(kind)
+
+
+def _prefill_cache(p, h, cfg, positions):
+    """Recompute K/V (cheap projections) to fill the decode cache."""
+    B, S, _ = h.shape
+    if cfg.attention == "mla":
+        from .layers import rmsnorm as _rms
+        kvr = cfg.kv_lora_rank
+        kv_a = h @ p["wkv_a"]
+        c_kv = _rms(kv_a[..., :kvr], p["kv_norm"])
+        k_rope = attn.apply_rope(kv_a[..., kvr:][:, :, None, :], positions,
+                                 cfg.rope_theta)[:, :, 0, :]
+        return {"c_kv": c_kv.astype(jnp.bfloat16),
+                "k_rope": k_rope.astype(jnp.bfloat16)}
+    Hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    k = (h @ p["wk"]).reshape(B, S, Hkv, hd)
+    v = (h @ p["wv"]).reshape(B, S, Hkv, hd)
+    if cfg.use_rope:
+        k = attn.apply_rope(k, positions, cfg.rope_theta)
+    if cfg.attention == "local" and S > cfg.window:
+        # ring cache: keep the last `window` keys, laid out at slot
+        # (abs_pos % window) so decode's pos%W writes line up.
+        W = cfg.window
+        k, v = k[:, -W:], v[:, -W:]
+        slots = (jnp.arange(S - W, S)) % W
+        inv = jnp.argsort(slots)
+        k, v = k[:, inv], v[:, inv]
+    return {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)}
+
+
+def _rec_prefill_cache(p, h, cfg):
+    xb = h @ p["w_x"]
+    xb_c, conv_state = rec._causal_conv(xb, p["conv_w"], p["conv_b"])
+    ga = xb_c @ p["gate_a_w"]
+    gx = xb_c @ p["gate_x_w"]
+    h0 = jnp.zeros((h.shape[0], cfg.rglru_dim), jnp.float32)
+    _, h_last = rec._rglru_scan(xb_c, rec._a_log(p["a_param"]), ga, gx, h0)
+    return {"h": h_last.astype(jnp.float32),
+            "conv": conv_state.astype(jnp.bfloat16)}
+
+
+def _xlstm_prefill_cache(p, h, cfg, kind):
+    # run the decode recurrence over the sequence to obtain final state
+    B, S, d = h.shape
+    shp = (rec.mlstm_cache_shape if kind == "mlstm"
+           else rec.slstm_cache_shape)(cfg, B)
+    st = jax.tree.map(
+        lambda s: (jnp.full(s.shape, -1e30, s.dtype)
+                   if kind == "slstm" and False else
+                   jnp.zeros(s.shape, s.dtype)), shp)
+    if kind == "slstm":
+        st["m"] = jnp.full_like(st["m"], -1e30)
+
+    step_fn = rec.mlstm_decode if kind == "mlstm" else rec.slstm_decode
+
+    def step(st, xt):
+        _, st = step_fn(p, xt[:, None, :], st, cfg)
+        return st, None
+
+    st, _ = jax.lax.scan(step, st, h.swapaxes(0, 1))
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Full-model specs
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg) -> dict:
+    head, pat, n_rep, tail = layer_layout(cfg)
+    sp: dict[str, Any] = {
+        "embed": ParamSpec((cfg.padded_vocab, cfg.d_model),
+                           P(None, "model"), scale=0.02),
+        "final_norm": _norm_specs(cfg),
+        "lm_head": ParamSpec((cfg.d_model, cfg.padded_vocab),
+                             P(None, "model"), scale=0.02),
+    }
+    if cfg.learned_pos:
+        sp["pos_embed"] = ParamSpec((cfg.max_seq, cfg.d_model),
+                                    P(None, None), scale=0.02)
+    sp["head_blocks"] = [block_specs(cfg, k) for k in head]
+    if n_rep:
+        stacked = {str(i): block_specs(cfg, k) for i, k in enumerate(pat)}
+        sp["blocks"] = jax.tree.map(
+            lambda s: ParamSpec((n_rep,) + s.shape,
+                                P(*((None,) + tuple(s.pspec))), s.dtype,
+                                s.init, s.scale),
+            stacked, is_leaf=lambda x: isinstance(x, ParamSpec))
+    sp["tail_blocks"] = [block_specs(cfg, k) for k in tail]
+    if cfg.is_encoder_decoder:
+        sp["enc_blocks"] = [block_specs(cfg, "enc_attn")
+                            for _ in range(cfg.n_enc_layers)]
+        sp["enc_norm"] = _norm_specs(cfg)
+        if cfg.learned_pos:
+            sp["enc_pos"] = ParamSpec((cfg.enc_seq, cfg.d_model),
+                                      P(None, None), scale=0.02)
+    return sp
+
+
+def cache_shapes(cfg, batch: int, max_seq: int) -> dict:
+    head, pat, n_rep, tail = layer_layout(cfg)
+    out: dict[str, Any] = {
+        "head": [block_cache_shape(cfg, k, batch, max_seq) for k in head],
+        "tail": [block_cache_shape(cfg, k, batch, max_seq) for k in tail],
+    }
+    if n_rep:
+        per = {str(i): block_cache_shape(cfg, k, batch, max_seq)
+               for i, k in enumerate(pat)}
+        out["blocks"] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_rep,) + s.shape, s.dtype), per)
+    else:
+        out["blocks"] = {}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _shard_act(x, cfg=None):
+    from repro.sharding import constrain
+    axes = cfg.batch_axes if cfg is not None else BATCH_AXES
+    if cfg is not None and cfg.shard_resid and cfg.layout != "fsdp":
+        # sequence-parallel-style residual: the remat'd layer-boundary
+        # activations shard over 'model' too, or 61 layers of (B,S,d)
+        # bf16 at d=7168 cannot fit HBM (EXPERIMENTS.md SPerf, kimi)
+        return constrain(x, axes, *([None] * (x.ndim - 2)), "model")
+    return constrain(x, axes, *([None] * (x.ndim - 1)))
+
+
+def _embed(params, tokens, cfg, *, pos_offset=None):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.learned_pos:
+        S = tokens.shape[1]
+        off = 0 if pos_offset is None else pos_offset
+        pe = jax.lax.dynamic_slice_in_dim(
+            params["pos_embed"].astype(x.dtype), off, S, axis=0)
+        x = x + pe[None]
+    return x.astype(cfg.dtype)
+
+
+def encoder_fwd(params, frames, cfg):
+    """frames: (B, enc_seq, d) precomputed stub embeddings."""
+    x = frames.astype(cfg.dtype)
+    if cfg.learned_pos:
+        x = x + params["enc_pos"][None, :x.shape[1]].astype(cfg.dtype)
+    positions = jnp.arange(x.shape[1])
+    for bp in params["enc_blocks"]:
+        x, _ = apply_block(bp, x, cfg, "enc_attn", positions=positions)
+    return _norm(params["enc_norm"], x, cfg)
+
+
+def forward(params, tokens, cfg, *, mode: str = "train", cache=None,
+            pos=None, enc_out=None, extra_embeds=None):
+    """tokens: (B,S) int32 (S=1 for decode).  Returns (logits, cache)."""
+    head, pat, n_rep, tail = layer_layout(cfg)
+    if cfg.is_encoder_decoder:
+        head, pat, n_rep, tail = [], ["xattn"], cfg.n_layers, []
+
+    x = _embed(params, tokens, cfg,
+               pos_offset=pos if mode == "decode" else None)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    x = _shard_act(x, cfg)
+    S = x.shape[1]
+    positions = jnp.arange(S) if mode != "decode" else None
+
+    new_head_caches, new_tail_caches = [], []
+    for i, (kind, bp) in enumerate(zip(head, params["head_blocks"])):
+        c = cache["head"][i] if cache is not None else None
+        x, c = apply_block(bp, x, cfg, kind, positions=positions, mode=mode,
+                           cache=c, pos=pos, enc_out=enc_out)
+        new_head_caches.append(c)
+
+    if n_rep:
+        def superblock(carry, xs):
+            x = carry
+            bp, c_in = xs
+            c_out = {}
+            for i, kind in enumerate(pat):
+                ci = c_in[str(i)] if c_in is not None else None
+                x, cn = apply_block(bp[str(i)], x, cfg, kind,
+                                    positions=positions, mode=mode,
+                                    cache=ci, pos=pos, enc_out=enc_out)
+                c_out[str(i)] = cn if cn is not None else 0
+            return x, c_out
+
+        body = superblock
+        if mode == "train" and cfg.remat:
+            body = jax.checkpoint(superblock)
+        blk_cache = cache["blocks"] if cache is not None else None
+        if cfg.unroll_layers:
+            # HLO counting mode: python loop so cost_analysis sees every
+            # layer (XLA:CPU counts a while body once; see dryrun.py)
+            outs = []
+            for r in range(n_rep):
+                bp = jax.tree.map(lambda t: t[r], params["blocks"])
+                ci = (jax.tree.map(lambda t: t[r], blk_cache)
+                      if blk_cache is not None else None)
+                x, co = body(x, (bp, ci))
+                outs.append(co)
+            new_blk_cache = (jax.tree.map(
+                lambda *ls: jnp.stack(ls), *outs)
+                if mode in ("prefill", "decode") else {})
+        elif blk_cache is None:
+            # scan requires real arrays; pass params only and thread None
+            x, new_blk_cache = jax.lax.scan(
+                lambda c, bp: body(c, (bp, None)), x, params["blocks"])
+        else:
+            x, new_blk_cache = jax.lax.scan(
+                lambda c, xs: body(c, xs), x,
+                (params["blocks"], blk_cache))
+    else:
+        new_blk_cache = {}
+
+    for i, (kind, bp) in enumerate(zip(tail, params["tail_blocks"])):
+        c = cache["tail"][i] if cache is not None else None
+        x, c = apply_block(bp, x, cfg, kind, positions=positions, mode=mode,
+                           cache=c, pos=pos, enc_out=enc_out)
+        new_tail_caches.append(c)
+
+    from repro.sharding import constrain
+    x = _norm(params["final_norm"], x, cfg)
+    logits = x @ params["lm_head"].astype(cfg.dtype)
+    logits = constrain(logits, cfg.batch_axes, None,
+                       None if cfg.layout == "fsdp" else "model")
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"head": new_head_caches, "blocks": new_blk_cache,
+                     "tail": new_tail_caches}
+    return logits, new_cache
+
+
+def lm_loss(logits: Array, labels: Array, mask: Optional[Array] = None
+            ) -> Array:
+    """Cross-entropy in f32; labels (B,S) int32; mask (B,S) optional."""
+    lf = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

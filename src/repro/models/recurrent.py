@@ -1,0 +1,320 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma) and xLSTM (mLSTM / sLSTM).
+
+Training/prefill paths are parallel-friendly (associative scan for
+RG-LRU, masked quadratic "linear attention" form for mLSTM, lax.scan for
+sLSTM); decode paths are O(1)-per-token state updates — which is what
+makes these architectures runnable at the long_500k shape.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import ParamSpec, act_fn
+
+Array = jax.Array
+_RG_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (Griffin): in -> (x-branch, gate-branch) -> conv1d
+#   -> RG-LRU -> out-proj, gated by GeLU branch
+# ---------------------------------------------------------------------------
+
+def rglru_block_specs(cfg) -> dict:
+    d, dr = cfg.d_model, cfg.rglru_dim
+    return {
+        "w_x": ParamSpec((d, dr), P(None, "model")),
+        "w_gate": ParamSpec((d, dr), P(None, "model")),
+        "conv_w": ParamSpec((4, dr), P(None, "model"), jnp.float32,
+                            scale=0.5),
+        "conv_b": ParamSpec((dr,), P("model"), jnp.float32, "zeros"),
+        "a_param": ParamSpec((dr,), P("model"), jnp.float32, "ones"),
+        "gate_a_w": ParamSpec((dr, dr), P(None, "model")),
+        "gate_x_w": ParamSpec((dr, dr), P(None, "model")),
+        "w_out": ParamSpec((dr, d), P("model", None)),
+    }
+
+
+def _a_log(a_param: Array) -> Array:
+    # parameterize a in (0,1): a = sigmoid(a_param)^(1); log a < 0
+    return jax.nn.log_sigmoid(a_param.astype(jnp.float32))
+
+
+def _causal_conv(x: Array, w: Array, b: Array,
+                 state: Optional[Array] = None):
+    """Depthwise causal conv, width 4.  x: (B,S,D); state: (B,3,D)."""
+    B, S, D = x.shape
+    if state is None:
+        state = jnp.zeros((B, 3, D), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)           # (B, S+3, D)
+    out = sum(xp[:, i:i + S] * w[i] for i in range(4)) + b
+    return out.astype(x.dtype), xp[:, -3:]
+
+
+def _rglru_scan(x: Array, a_log: Array, ga: Array, gx: Array,
+                h0: Array) -> tuple[Array, Array]:
+    """Associative-scan RG-LRU.  x/ga/gx: (B,S,D); h0: (B,D)."""
+    r = jax.nn.sigmoid(ga.astype(jnp.float32))
+    i = jax.nn.sigmoid(gx.astype(jnp.float32))
+    log_a = _RG_C * a_log * r                         # (B,S,D)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1 - jnp.exp(2 * log_a), 1e-12)) \
+        * (i * x.astype(jnp.float32))
+    # fold h0 into the first step: h_t = a_t h_{t-1} + b_t
+    b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    A, Bc = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return Bc.astype(x.dtype), Bc[:, -1]
+
+
+def rglru_block_fwd(p: dict, x: Array, cfg) -> Array:
+    """Training/prefill.  x: (B,S,d)."""
+    xb = x @ p["w_x"]
+    gb = jax.nn.gelu(x @ p["w_gate"])
+    xb, _ = _causal_conv(xb, p["conv_w"], p["conv_b"])
+    ga = xb @ p["gate_a_w"]
+    gx = xb @ p["gate_x_w"]
+    h0 = jnp.zeros((x.shape[0], cfg.rglru_dim), jnp.float32)
+    h, _ = _rglru_scan(xb, _a_log(p["a_param"]), ga, gx, h0)
+    return (h * gb) @ p["w_out"]
+
+
+def rglru_cache_shape(cfg, batch: int) -> dict:
+    dr = cfg.rglru_dim
+    return {"h": jax.ShapeDtypeStruct((batch, dr), jnp.float32),
+            "conv": jax.ShapeDtypeStruct((batch, 3, dr), jnp.bfloat16)}
+
+
+def rglru_block_decode(p: dict, x: Array, cache: dict, cfg
+                       ) -> tuple[Array, dict]:
+    """x: (B,1,d) one token."""
+    xb = x @ p["w_x"]
+    gb = jax.nn.gelu(x @ p["w_gate"])
+    xb, conv_state = _causal_conv(xb, p["conv_w"], p["conv_b"],
+                                  cache["conv"].astype(xb.dtype))
+    ga = xb @ p["gate_a_w"]
+    gx = xb @ p["gate_x_w"]
+    a_log = _a_log(p["a_param"])
+    r = jax.nn.sigmoid(ga[:, 0].astype(jnp.float32))
+    i = jax.nn.sigmoid(gx[:, 0].astype(jnp.float32))
+    log_a = _RG_C * a_log * r
+    at = jnp.exp(log_a)
+    bt = jnp.sqrt(jnp.maximum(1 - jnp.exp(2 * log_a), 1e-12)) \
+        * (i * xb[:, 0].astype(jnp.float32))
+    h = at * cache["h"] + bt
+    out = (h[:, None].astype(x.dtype) * gb) @ p["w_out"]
+    return out, {"h": h, "conv": conv_state.astype(jnp.bfloat16)}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix-memory LSTM, xLSTM):  parallel quadratic form for
+# training/prefill, recurrent state (C, n, m) for decode.
+# ---------------------------------------------------------------------------
+
+def mlstm_specs(cfg) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    return {
+        "wq": ParamSpec((d, d), P(None, "model")),
+        "wk": ParamSpec((d, d), P(None, "model")),
+        "wv": ParamSpec((d, d), P(None, "model")),
+        # per-head gates: H is small (4) — replicate, never shard
+        "w_i": ParamSpec((d, H), P(None, None), jnp.float32),
+        "w_f": ParamSpec((d, H), P(None, None), jnp.float32),
+        "w_o": ParamSpec((d, d), P(None, "model")),
+        "wo": ParamSpec((d, d), P("model", None)),
+        "ln_g": ParamSpec((d,), P("model"), jnp.float32, "ones"),
+    }
+
+
+def _mlstm_heads(p, x, cfg):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, H, hd) / math.sqrt(hd)
+    v = (x @ p["wv"]).reshape(B, S, H, hd)
+    i_pre = (x @ p["w_i"]).astype(jnp.float32)          # (B,S,H)
+    f_pre = (x @ p["w_f"]).astype(jnp.float32)
+    return q, k, v, i_pre, f_pre
+
+
+def mlstm_fwd(p: dict, x: Array, cfg) -> Array:
+    """Stabilized CHUNKWISE-parallel mLSTM forward.
+
+    The naive parallel form materializes (B,S,S,H) — 17 TB at the 32k
+    prefill shape — so the sequence is processed in chunks of size c:
+    intra-chunk quadratic (c x c) + inter-chunk recurrent state
+    (C, n, m) carried by lax.scan, exactly the decode recurrence run
+    once per chunk.  O(S*c) memory, O(S*(c + hd)) work per head-dim —
+    this is the sub-quadratic engine behind the xLSTM long_500k cells.
+    """
+    from .layers import rmsnorm
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    c = min(getattr(cfg, "attn_chunk", 256) or 256, S)
+    assert S % c == 0, (S, c)
+    nc = S // c
+    q, k, v, i_pre, f_pre = _mlstm_heads(p, x, cfg)
+    qf = q.astype(jnp.float32).reshape(B, nc, c, H, hd)
+    kf = k.astype(jnp.float32).reshape(B, nc, c, H, hd)
+    vf = v.astype(jnp.float32).reshape(B, nc, c, H, hd)
+    logf = jax.nn.log_sigmoid(f_pre).reshape(B, nc, c, H)
+    ii = i_pre.reshape(B, nc, c, H)
+
+    mask = jnp.tril(jnp.ones((c, c), bool))
+
+    def chunk_step(carry, inp):
+        C0, n0, m0 = carry                 # (B,H,hd,hd), (B,H,hd), (B,H)
+        qc, kc, vc, lf, ic = inp           # (B,c,H,*)
+        F = jnp.cumsum(lf, axis=1)         # within-chunk cumulative log f
+        # stabilizer per position: max(F_t + m0, max_{s<=t} F_t - F_s + i_s)
+        Dm = (F[:, :, None, :] - F[:, None, :, :]
+              + ic[:, None, :, :])                       # (B,t,s,H)
+        Dm = jnp.where(mask[None, :, :, None], Dm, -jnp.inf)
+        m_intra = Dm.max(axis=2)                          # (B,c,H)
+        m_t = jnp.maximum(F + m0[:, None, :], m_intra)    # (B,c,H)
+        # inter-chunk: h_inter_t = exp(F_t + m0 - m_t) * q_t^T C0
+        w_inter = jnp.exp(F + m0[:, None, :] - m_t)       # (B,c,H)
+        h_inter = jnp.einsum("bchk,bhkv->bchv", qc, C0) * w_inter[..., None]
+        n_inter = jnp.einsum("bchk,bhk->bch", qc, n0) * w_inter
+        # intra-chunk: scores weighted by exp(Dm - m_t)
+        Dexp = jnp.exp(Dm - m_t[:, :, None, :])           # (B,t,s,H)
+        sc = jnp.einsum("bthd,bshd->btsh", qc, kc) * Dexp
+        h_intra = jnp.einsum("btsh,bshd->bthd", sc, vc)
+        n_intra = sc.sum(axis=2)                           # (B,c,H)
+        den = jnp.maximum(jnp.abs(n_inter + n_intra), jnp.exp(-m_t))
+        h = (h_inter + h_intra) / den[..., None]
+        # chunk-end state (t = c)
+        Fc = F[:, -1]                                      # (B,H)
+        m_c = m_t[:, -1]
+        wC = jnp.exp(Fc + m0 - m_c)                        # (B,H)
+        wk = jnp.exp(Fc[:, None, :] - F + ic - m_c[:, None, :])  # (B,c,H)
+        C1 = wC[..., None, None] * C0 + jnp.einsum(
+            "bshk,bshv->bhkv", kc * wk[..., None], vc)
+        n1 = wC[..., None] * n0 + jnp.einsum("bsh,bshk->bhk", wk, kc)
+        return (C1, n1, m_c), h
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    args = (qf.swapaxes(0, 1), kf.swapaxes(0, 1), vf.swapaxes(0, 1),
+            logf.swapaxes(0, 1), ii.swapaxes(0, 1))
+    _, hs = jax.lax.scan(chunk_step, (C0, n0, m0), args)
+    h = hs.swapaxes(0, 1).reshape(B, S, d)
+    o = jax.nn.sigmoid((x @ p["w_o"]).astype(jnp.float32))
+    out = rmsnorm(h.astype(x.dtype), p["ln_g"]) * o.astype(x.dtype)
+    return out @ p["wo"]
+
+
+def mlstm_cache_shape(cfg, batch: int) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    return {"C": jax.ShapeDtypeStruct((batch, H, hd, hd), jnp.float32),
+            "n": jax.ShapeDtypeStruct((batch, H, hd), jnp.float32),
+            "m": jax.ShapeDtypeStruct((batch, H), jnp.float32)}
+
+
+def mlstm_decode(p: dict, x: Array, cache: dict, cfg
+                 ) -> tuple[Array, dict]:
+    from .layers import rmsnorm
+    B, _, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    q, k, v, i_pre, f_pre = _mlstm_heads(p, x, cfg)
+    q, k, v = (t[:, 0].astype(jnp.float32) for t in (q, k, v))
+    i_pre, f_pre = i_pre[:, 0], f_pre[:, 0]             # (B,H)
+
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + cache["m"], i_pre)
+    f_sc = jnp.exp(logf + cache["m"] - m_new)[..., None]
+    i_sc = jnp.exp(i_pre - m_new)[..., None]
+    C = f_sc[..., None] * cache["C"] \
+        + i_sc[..., None] * jnp.einsum("bhk,bhv->bhkv", k, v)
+    n = f_sc * cache["n"] + i_sc * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n)),
+                      jnp.exp(-m_new))[..., None]
+    h = (num / den).reshape(B, 1, d).astype(x.dtype)
+    o = jax.nn.sigmoid((x @ p["w_o"]).astype(jnp.float32))
+    out = rmsnorm(h, p["ln_g"]) * o.astype(x.dtype)
+    return out @ p["wo"], {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar-memory LSTM with exponential gating) — strictly sequential
+# ---------------------------------------------------------------------------
+
+def slstm_specs(cfg) -> dict:
+    d = cfg.d_model
+    return {
+        "w_z": ParamSpec((d, d), P(None, "model")),
+        "w_i": ParamSpec((d, d), P(None, "model"), jnp.float32),
+        "w_f": ParamSpec((d, d), P(None, "model"), jnp.float32),
+        "w_o": ParamSpec((d, d), P(None, "model")),
+        "r_z": ParamSpec((d, d), P(None, "model")),
+        "wo": ParamSpec((d, d), P("model", None)),
+    }
+
+
+def slstm_cache_shape(cfg, batch: int) -> dict:
+    d = cfg.d_model
+    z = lambda: jax.ShapeDtypeStruct((batch, d), jnp.float32)
+    return {"c": z(), "n": z(), "m": z(), "h": z()}
+
+
+def _slstm_step(p, xt, st):
+    """xt: (B,d) f32 pre-projections applied outside for speed."""
+    zt, it, ft, ot, rz = xt
+    h_prev = st["h"]
+    z = jnp.tanh(zt + h_prev @ rz)
+    m_new = jnp.maximum(ft + st["m"], it)
+    i_sc = jnp.exp(it - m_new)
+    f_sc = jnp.exp(ft + st["m"] - m_new)
+    c = f_sc * st["c"] + i_sc * z
+    n = f_sc * st["n"] + i_sc
+    h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "m": m_new, "h": h}
+
+
+def slstm_fwd(p: dict, x: Array, cfg) -> Array:
+    B, S, d = x.shape
+    xf = x
+    z = (xf @ p["w_z"]).astype(jnp.float32)
+    i = (xf @ p["w_i"]).astype(jnp.float32)
+    f = jax.nn.log_sigmoid((xf @ p["w_f"]).astype(jnp.float32))
+    o = (xf @ p["w_o"]).astype(jnp.float32)
+    rz = p["r_z"].astype(jnp.float32)
+    st0 = {k: jnp.zeros((B, d), jnp.float32) for k in ("c", "n", "h")}
+    st0["m"] = jnp.full((B, d), -1e30, jnp.float32)
+
+    def step(st, inp):
+        zt, it, ft, ot = inp
+        st = _slstm_step(p, (zt, it, ft, ot, rz), st)
+        return st, st["h"]
+
+    _, hs = jax.lax.scan(step, st0,
+                         (z.swapaxes(0, 1), i.swapaxes(0, 1),
+                          f.swapaxes(0, 1), o.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1).astype(x.dtype) @ p["wo"]
+
+
+def slstm_decode(p: dict, x: Array, cache: dict, cfg
+                 ) -> tuple[Array, dict]:
+    z = (x @ p["w_z"]).astype(jnp.float32)[:, 0]
+    i = (x @ p["w_i"]).astype(jnp.float32)[:, 0]
+    f = jax.nn.log_sigmoid((x @ p["w_f"]).astype(jnp.float32))[:, 0]
+    o = (x @ p["w_o"]).astype(jnp.float32)[:, 0]
+    st = _slstm_step(p, (z, i, f, o, p["r_z"].astype(jnp.float32)), cache)
+    return (st["h"][:, None].astype(x.dtype)) @ p["wo"], st

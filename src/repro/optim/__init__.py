@@ -1,0 +1,5 @@
+"""Optimizers and distributed-optimization tricks."""
+from . import adamw, compression, lbfgs
+from .adamw import AdamWConfig, AdamWState
+
+__all__ = ["adamw", "compression", "lbfgs", "AdamWConfig", "AdamWState"]

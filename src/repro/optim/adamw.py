@@ -1,0 +1,114 @@
+"""AdamW with dtype-configurable states and ZeRO-compatible sharding.
+
+Optimizer states take their own PartitionSpecs (launch/steps.py): under
+ZeRO-1 they are additionally sharded over 'data' while the params stay
+replicated — one grad all-reduce + one update all-gather per STEP,
+instead of per-layer weight gathers (the measured ZeRO-3 cost on the
+20B dense archs; EXPERIMENTS.md SPerf).
+
+State dtype: f32 for fidelity, bf16 to halve optimizer HBM, "int8" for
+8-bit-Adam-style block-quantized moments (per-row f32 scales) — the
+latter is what fits the 1T-param MoE's moments on a single 256-chip pod
+(16 GiB HBM each; EXPERIMENTS.md SPerf kimi iteration).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: Any = jnp.float32     # f32 | bf16 | "int8"
+    grad_clip: float = 1.0
+
+
+class QMoment(NamedTuple):
+    """int8 moment with per-row (last-dim) f32 scales — 8-bit-Adam style
+    block quantization, ~1.004 bytes/param.  Moments are re-quantized
+    from fresh f32 values each step, so quantization noise does not
+    accumulate beyond one step's contribution."""
+    q: Array
+    scale: Array
+
+
+def _quant(x: Array) -> QMoment:
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    return QMoment(jnp.clip(jnp.round(x / scale), -127, 127
+                            ).astype(jnp.int8), scale)
+
+
+def _dequant(m) -> Array:
+    if isinstance(m, QMoment):
+        return m.q.astype(jnp.float32) * m.scale
+    return m.astype(jnp.float32)
+
+
+def _requant_like(x32: Array, m):
+    if isinstance(m, QMoment):
+        return _quant(x32)
+    return x32.astype(m.dtype)
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    mu: Any
+    nu: Any
+
+
+def init(params, cfg: AdamWConfig) -> AdamWState:
+    def z(p):
+        if cfg.state_dtype == "int8":
+            return QMoment(jnp.zeros(p.shape, jnp.int8),
+                           jnp.full(p.shape[:-1] + (1,), 1e-30,
+                                    jnp.float32))
+        return jnp.zeros(p.shape, cfg.state_dtype)
+
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(z, params),
+                      nu=jax.tree.map(z, params))
+
+
+def apply(params, grads, state: AdamWState, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip else 1.0
+    step = state.step + 1
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = _dequant(m) * cfg.b1 + (1 - cfg.b1) * g
+        v32 = _dequant(v) * cfg.b2 + (1 - cfg.b2) * g * g
+        u = (m32 / b1c) / (jnp.sqrt(v32 / b2c) + cfg.eps)
+        if p.ndim >= 2:   # decoupled weight decay on matrices only
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - cfg.lr * u
+        return (newp.astype(p.dtype), _requant_like(m32, m),
+                _requant_like(v32, v))
+
+    # flatten against the PARAM treedef so QMoment leaves stay whole
+    leaves_p, treedef = jax.tree.flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_m = treedef.flatten_up_to(state.mu)
+    leaves_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(leaves_p, leaves_g, leaves_m, leaves_v)]
+    newp = treedef.unflatten([t[0] for t in out])
+    newm = treedef.unflatten([t[1] for t in out])
+    newv = treedef.unflatten([t[2] for t in out])
+    return newp, AdamWState(step, newm, newv), {"grad_norm": gnorm}

@@ -1,0 +1,97 @@
+"""L-BFGS for GLMs — the 'scikit-learn solver' stand-in for Fig 6.
+
+Two-loop recursion with backtracking Armijo line search, pure JAX.
+Used by benchmarks/fig6_solvers.py as the general-purpose baseline the
+paper compares its SDCA against (scikit-learn lbfgs/liblinear).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.objectives import Objective
+
+
+def glm_objective(obj: Objective, X, y, lam: float) -> Callable:
+    X = jnp.asarray(X)
+    y = jnp.asarray(y)
+    n = y.shape[0]
+
+    def f(w):
+        m = X.T @ w
+        return jnp.sum(obj.loss(m, y)) / n + 0.5 * lam * jnp.sum(w * w)
+
+    return jax.jit(jax.value_and_grad(f))
+
+
+def lbfgs(value_and_grad: Callable, w0, *, max_iters: int = 500,
+          m: int = 10, tol: float = 1e-7):
+    """Returns (w, history) — history rows: (iter, t, f, |g|)."""
+    w = jnp.asarray(w0)
+    f, g = value_and_grad(w)
+    S, Y = [], []
+    hist = [(0, 0.0, float(f), float(jnp.linalg.norm(g)))]
+    t0 = time.perf_counter()
+    for it in range(1, max_iters + 1):
+        q = g
+        alphas = []
+        for s, yv in zip(reversed(S), reversed(Y)):
+            rho = 1.0 / jnp.vdot(yv, s)
+            a = rho * jnp.vdot(s, q)
+            q = q - a * yv
+            alphas.append((a, rho))
+        gamma = (jnp.vdot(S[-1], Y[-1]) / jnp.vdot(Y[-1], Y[-1])
+                 if S else 1.0)
+        r = gamma * q
+        for (a, rho), s, yv in zip(reversed(alphas), S, Y):
+            b = rho * jnp.vdot(yv, r)
+            r = r + (a - b) * s
+        d = -r
+        # Armijo backtracking
+        step, c1 = 1.0, 1e-4
+        gtd = jnp.vdot(g, d)
+        for _ in range(30):
+            f_new, g_new = value_and_grad(w + step * d)
+            if f_new <= f + c1 * step * gtd:
+                break
+            step *= 0.5
+        s = step * d
+        yv = g_new - g
+        if jnp.vdot(s, yv) > 1e-10:
+            S.append(s)
+            Y.append(yv)
+            if len(S) > m:
+                S.pop(0)
+                Y.pop(0)
+        w, f, g = w + s, f_new, g_new
+        gn = float(jnp.linalg.norm(g))
+        hist.append((it, time.perf_counter() - t0, float(f), gn))
+        if gn < tol:
+            break
+    return w, hist
+
+
+def gradient_descent(value_and_grad: Callable, w0, *, lr: float = 1.0,
+                     max_iters: int = 2000, tol: float = 1e-7):
+    """Plain GD with backtracking — the 'sag-like' slow baseline."""
+    w = jnp.asarray(w0)
+    hist = []
+    t0 = time.perf_counter()
+    for it in range(max_iters):
+        f, g = value_and_grad(w)
+        gn = float(jnp.linalg.norm(g))
+        hist.append((it, time.perf_counter() - t0, float(f), gn))
+        if gn < tol:
+            break
+        step = lr
+        for _ in range(20):
+            f_new, _ = value_and_grad(w - step * g)
+            if f_new < f:
+                break
+            step *= 0.5
+        w = w - step * g
+    return w, hist

@@ -1,0 +1,64 @@
+"""Sharding context: mesh registry + guarded sharding constraints.
+
+Model code calls `constrain(x, axis, axis, ...)` unconditionally; the
+constraint is a no-op unless a mesh has been registered (smoke tests run
+mesh-less on one CPU device, the launcher registers the production mesh).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint(x, P(*spec)) iff a mesh is registered.
+
+    Axis names absent from the registered mesh are dropped from the spec,
+    so the same model code works on a ("data","model") mesh and a
+    ("pod","data","model") mesh.
+    """
+    if _MESH is None:
+        return x
+    names = set(_MESH.axis_names)
+
+    def keep(e):
+        if e is None:
+            return None
+        if isinstance(e, (tuple, list)):
+            kept = tuple(a for a in e if a in names)
+            return kept if kept else None
+        return e if e in names else None
+
+    cleaned = P(*(keep(e) for e in spec))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_MESH, cleaned))
+
+
+def clean_pspec(spec: P) -> P:
+    """Drop axis names not present in the registered mesh from a spec."""
+    if _MESH is None:
+        return spec
+    names = set(_MESH.axis_names)
+
+    def keep(e):
+        if e is None:
+            return None
+        if isinstance(e, (tuple, list)):
+            kept = tuple(a for a in e if a in names)
+            return kept if kept else None
+        return e if e in names else None
+
+    return P(*(keep(e) for e in spec))

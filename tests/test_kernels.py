@@ -1,0 +1,171 @@
+"""Pallas kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.objectives import HINGE, LOGISTIC, RIDGE
+from repro.kernels import ops, ref
+
+OBJS = [LOGISTIC, RIDGE, HINGE]
+
+
+def _data(obj, d, n, seed, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.standard_normal((d, n)), dtype)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], n) if obj.classification
+                    else rng.standard_normal(n), dtype)
+    a = jnp.zeros(n, dtype)
+    v0 = jnp.asarray(rng.standard_normal(d) * 0.1, jnp.float32)
+    return X, y, a, v0
+
+
+@pytest.mark.parametrize("obj", OBJS, ids=lambda o: o.name)
+@pytest.mark.parametrize("d,n,B", [
+    (8, 32, 8),          # minimal tile
+    (37, 64, 16),        # d needs padding
+    (100, 96, 16),       # padding + several buckets
+    (128, 64, 32),       # aligned, wide bucket
+    (13, 40, 8),         # both d and n awkward; B | n
+])
+def test_sdca_bucket_kernel_matches_oracle(obj, d, n, B):
+    X, y, a, v0 = _data(obj, d, n, seed=d * 1000 + n)
+    lam_n, sig = 0.1 * n, 2.0
+    a_k, dv_k = ops.sdca_bucket_subepoch(obj, X, y, a, v0, lam_n, sig,
+                                         bucket=B, interpret=True)
+    a_r, v_r = ref.sdca_subepoch_ref(obj, X, y, a, v0, lam_n, sig)
+    dv_r = (v_r - v0) / sig
+    np.testing.assert_allclose(np.asarray(a_k), np.asarray(a_r),
+                               rtol=3e-4, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(dv_k), np.asarray(dv_r),
+                               rtol=3e-4, atol=3e-5)
+
+
+@pytest.mark.parametrize("obj", OBJS, ids=lambda o: o.name)
+def test_sdca_kernel_sequential_semantics(obj):
+    """Kernel must process buckets IN ORDER: running it over [b0, b1] must
+    equal running b0 then b1 with the carried v."""
+    d, n, B = 16, 32, 16
+    X, y, a, v0 = _data(obj, d, n, seed=9)
+    lam_n, sig = 3.2, 1.0
+    a_all, dv_all = ops.sdca_bucket_subepoch(obj, X, y, a, v0, lam_n, sig,
+                                             bucket=B, interpret=True)
+    a1, dv1 = ops.sdca_bucket_subepoch(obj, X[:, :B], y[:B], a[:B], v0,
+                                       lam_n, sig, bucket=B,
+                                       interpret=True)
+    v_mid = v0 + sig * dv1
+    a2, dv2 = ops.sdca_bucket_subepoch(obj, X[:, B:], y[B:], a[B:], v_mid,
+                                       lam_n, sig, bucket=B,
+                                       interpret=True)
+    np.testing.assert_allclose(np.asarray(a_all),
+                               np.concatenate([a1, a2]),
+                               rtol=3e-4, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(dv_all),
+                               np.asarray(dv1 + dv2), rtol=3e-4,
+                               atol=3e-5)
+
+
+@pytest.mark.parametrize("T,D,bt", [
+    (64, 128, 16), (128, 128, 128), (256, 256, 64), (32, 8, 8),
+])
+def test_rglru_kernel_matches_oracle(T, D, bt):
+    rng = np.random.default_rng(T + D)
+    x = jnp.asarray(rng.standard_normal((T, D)), jnp.float32)
+    ga = jnp.asarray(rng.standard_normal((T, D)), jnp.float32)
+    gx = jnp.asarray(rng.standard_normal((T, D)), jnp.float32)
+    a_log = -jnp.abs(jnp.asarray(rng.standard_normal(D), jnp.float32)) * .1
+    h0 = jnp.asarray(rng.standard_normal(D) * 0.1, jnp.float32)
+    hk = ops.rglru_scan(x, a_log, ga, gx, h0, block_t=bt, interpret=True)
+    hr = ref.rglru_ref(x, a_log, ga, gx, h0)
+    np.testing.assert_allclose(np.asarray(hk), np.asarray(hr),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru_kernel_dtypes(dtype):
+    T, D = 64, 128
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((T, D)), dtype)
+    ga = jnp.asarray(rng.standard_normal((T, D)), dtype)
+    gx = jnp.asarray(rng.standard_normal((T, D)), dtype)
+    a_log = -jnp.abs(jnp.asarray(rng.standard_normal(D), jnp.float32)) * .1
+    h0 = jnp.zeros(D, jnp.float32)
+    hk = ops.rglru_scan(x, a_log, ga, gx, h0, block_t=32, interpret=True)
+    hr = ref.rglru_ref(x.astype(jnp.float32), a_log,
+                       ga.astype(jnp.float32), gx.astype(jnp.float32), h0)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(hk, np.float32),
+                               np.asarray(hr), rtol=tol, atol=tol)
+
+
+def test_kernel_rejects_bad_tile():
+    with pytest.raises(ValueError):
+        from repro.kernels import sdca_bucket
+        import functools
+        sdca_bucket.sdca_bucket_kernel(
+            LOGISTIC, jnp.zeros((2, 9, 8)), jnp.zeros((2, 8)),
+            jnp.zeros((2, 8)), jnp.zeros((9, 1)), jnp.zeros(2), True)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention kernel (kernels/flash_attention.py)
+# ---------------------------------------------------------------------------
+
+from repro.models.attention import blocked_attention
+
+
+@pytest.mark.parametrize("kind", ["causal", "full", "local"])
+@pytest.mark.parametrize("B,Sq,Sk,H,Hkv,hd,hd_v", [
+    (2, 64, 64, 4, 2, 32, 32),      # GQA
+    (1, 64, 64, 4, 1, 32, 16),      # MQA, hd_v != hd (MLA-like)
+    (1, 32, 64, 2, 2, 32, 32),      # Sq != Sk
+    (2, 48, 48, 2, 2, 16, 16),      # non-multiple of block (pads)
+])
+def test_flash_attention_matches_blocked(kind, B, Sq, Sk, H, Hkv, hd,
+                                         hd_v):
+    if kind == "causal" and Sq != Sk:
+        pytest.skip("causal needs aligned positions")
+    rng = np.random.default_rng(Sq + Sk + H)
+    window = 24
+    q = jnp.asarray(rng.standard_normal((B, Sq, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Sk, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Sk, Hkv, hd_v)), jnp.float32)
+    ref_out = blocked_attention(q, k, v, q_positions=jnp.arange(Sq),
+                                kind=kind, window=window, chunk=16)
+    out = ops.flash_attention(q, k, v, kind=kind, window=window,
+                              bq=16, bk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    rng = np.random.default_rng(7)
+    B, S, H, hd = 1, 64, 2, 32
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, S, H, hd)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, S, H, hd)), dtype)
+    ref_out = blocked_attention(q, k, v, q_positions=jnp.arange(S),
+                                kind="causal", chunk=16)
+    out = ops.flash_attention(q, k, v, kind="causal", bq=16, bk=16,
+                              interpret=True)
+    tol = 2e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref_out, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_causal_tile_skip_correct():
+    """The skipped tiles must not change results vs a full sweep: compare
+    block sizes that do / don't align with the diagonal."""
+    rng = np.random.default_rng(9)
+    B, S, H, hd = 1, 96, 2, 32
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+    o1 = ops.flash_attention(q, k, v, kind="causal", bq=16, bk=16,
+                             interpret=True)
+    o2 = ops.flash_attention(q, k, v, kind="causal", bq=32, bk=48,
+                             interpret=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,106 @@
+"""Unit + property tests for the GLM objectives and SDCA scalar update."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.objectives import (HINGE, LOGISTIC, RIDGE, duality_gap,
+                                   get_objective)
+
+jax.config.update("jax_enable_x64", False)
+
+OBJS = [RIDGE, HINGE, LOGISTIC]
+
+
+def _label(obj, rng):
+    return (rng.choice([-1.0, 1.0]) if obj.classification
+            else float(rng.standard_normal()))
+
+
+@pytest.mark.parametrize("obj", OBJS, ids=lambda o: o.name)
+def test_delta_minimizes_scalar_subproblem(obj):
+    """delta = argmin_d phi*(-(a+d)) + m d + q d^2/2 — check vs grid."""
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        m = float(rng.standard_normal())
+        y = _label(obj, rng)
+        q = float(rng.uniform(0.05, 5.0))
+        if obj.classification:
+            b0 = rng.uniform(0.02, 0.98)
+            a = float(y * b0)
+        else:
+            a = float(rng.standard_normal() * 0.3)
+        d_star = float(obj.delta(jnp.float32(m), jnp.float32(a),
+                                 jnp.float32(y), jnp.float32(q)))
+
+        def g(d):
+            return float(obj.conj_neg(jnp.float32(a + d), jnp.float32(y))
+                         + m * d + 0.5 * q * d * d)
+
+        g_star = g(d_star)
+        # compare against a fine grid around the feasible region
+        if obj.classification:
+            grid = (np.linspace(1e-4, 1 - 1e-4, 2001) * y - a)
+        else:
+            grid = np.linspace(d_star - 2.0, d_star + 2.0, 2001)
+        g_grid = min(g(d) for d in grid)
+        assert g_star <= g_grid + 5e-4, (obj.name, g_star, g_grid)
+
+
+@pytest.mark.parametrize("obj", OBJS, ids=lambda o: o.name)
+def test_conjugate_fenchel_young(obj):
+    """phi(z) + phi*(-a) = -z*a at a = -phi'(z) (Fenchel-Young)."""
+    rng = np.random.default_rng(1)
+    for _ in range(100):
+        z = float(rng.standard_normal() * 2)
+        y = _label(obj, rng)
+        if obj.name == "ridge":
+            a_opt = -(z - y)
+        elif obj.name == "logistic":
+            a_opt = y / (1 + np.exp(y * z))
+        else:           # hinge: subgradient; test only at z*y < 1 (a=y)
+            if y * z >= 1:
+                continue
+            a_opt = y
+        lhs = float(obj.loss(jnp.float32(z), jnp.float32(y))
+                    + obj.conj_neg(jnp.float32(a_opt), jnp.float32(y)))
+        assert abs(lhs + z * a_opt) < 1e-3, (obj.name, lhs, -z * a_opt)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([o.name for o in OBJS]))
+@settings(max_examples=30, deadline=None)
+def test_weak_duality_property(seed, obj_name):
+    """gap = P(v) - D(alpha) >= 0 whenever v = A @ alpha / (lam n)."""
+    obj = get_objective(obj_name)
+    rng = np.random.default_rng(seed)
+    d, n = 5, 32
+    lam = 0.1
+    X = jnp.asarray(rng.standard_normal((d, n)), jnp.float32)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], n) if obj.classification
+                    else rng.standard_normal(n), jnp.float32)
+    if obj.classification:
+        alpha = jnp.asarray(rng.uniform(0.01, 0.99, n), jnp.float32) * y
+    else:
+        alpha = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    v = X @ alpha / (lam * n)
+    gap = float(duality_gap(obj, alpha, v, X, y, lam))
+    assert gap >= -1e-3, gap
+
+
+@given(st.floats(-3, 3), st.floats(0.05, 5), st.floats(0.02, 0.98),
+       st.sampled_from([-1.0, 1.0]))
+@settings(max_examples=100, deadline=None)
+def test_delta_keeps_dual_feasible(m, q, b0, y):
+    """classification duals must stay in the conjugate domain."""
+    for obj in (HINGE, LOGISTIC):
+        a = y * b0
+        d = float(obj.delta(jnp.float32(m), jnp.float32(a),
+                            jnp.float32(y), jnp.float32(q)))
+        b_new = (a + d) * y
+        assert -1e-5 <= b_new <= 1 + 1e-5, (obj.name, b_new)
+
+
+def test_get_objective_errors():
+    with pytest.raises(ValueError):
+        get_objective("nope")

@@ -1,0 +1,101 @@
+"""Partition schedules: coverage, (in)variance across epochs, jit-safety."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bucketing import choose_bucket_size, make_plan
+from repro.core.partition import PartitionPlan
+
+
+def _sched(plan, e):
+    return np.asarray(plan.schedule(jnp.int32(e)))
+
+
+@pytest.mark.parametrize("mode", ["static", "dynamic", "hierarchical",
+                                  "rotation"])
+def test_every_epoch_covers_all_buckets_once(mode):
+    plan = PartitionPlan(n_buckets=96, pods=2, lanes=4, mode=mode)
+    for e in range(4):
+        s = _sched(plan, e)
+        assert s.shape == (2, 4, 12)
+        assert sorted(s.reshape(-1).tolist()) == list(range(96))
+
+
+def test_static_is_epoch_invariant():
+    plan = PartitionPlan(n_buckets=64, pods=2, lanes=4, mode="static")
+    assert np.array_equal(_sched(plan, 0), _sched(plan, 5))
+
+
+@pytest.mark.parametrize("mode", ["dynamic", "hierarchical", "rotation"])
+def test_nonstatic_changes_across_epochs(mode):
+    plan = PartitionPlan(n_buckets=64, pods=2, lanes=4, mode=mode)
+    assert not np.array_equal(_sched(plan, 0), _sched(plan, 1))
+
+
+@pytest.mark.parametrize("mode", ["hierarchical", "rotation"])
+def test_pod_assignment_is_static(mode):
+    """Buckets never cross pods (paper's NUMA rule): pod p owns the
+    contiguous range [p*per_pod, (p+1)*per_pod)."""
+    plan = PartitionPlan(n_buckets=64, pods=4, lanes=2, mode=mode)
+    per_pod = 64 // 4
+    for e in range(3):
+        s = _sched(plan, e)
+        for p in range(4):
+            ids = s[p].reshape(-1)
+            assert ids.min() >= p * per_pod
+            assert ids.max() < (p + 1) * per_pod
+
+
+def test_rotation_rotates_lane_blocks():
+    """At epoch e, lane k holds (a shuffle of) lane (k+e)%K's static
+    block."""
+    plan = PartitionPlan(n_buckets=64, pods=1, lanes=4, mode="rotation")
+    per_lane = 16
+    for e in range(5):
+        s = _sched(plan, e)[0]
+        for k in range(4):
+            src = (k + e) % 4
+            expect = set(range(src * per_lane, (src + 1) * per_lane))
+            assert set(s[k].tolist()) == expect
+
+
+def test_schedule_is_jittable():
+    plan = PartitionPlan(n_buckets=32, pods=2, lanes=2, mode="dynamic")
+    f = jax.jit(lambda e: plan.schedule(e))
+    s = np.asarray(f(jnp.int32(3)))
+    assert sorted(s.reshape(-1).tolist()) == list(range(32))
+
+
+def test_seed_determinism():
+    p1 = PartitionPlan(n_buckets=32, pods=1, lanes=4, mode="dynamic",
+                       seed=7)
+    p2 = PartitionPlan(n_buckets=32, pods=1, lanes=4, mode="dynamic",
+                       seed=7)
+    assert np.array_equal(_sched(p1, 2), _sched(p2, 2))
+
+
+def test_divisibility_error():
+    with pytest.raises(ValueError):
+        PartitionPlan(n_buckets=10, pods=3, lanes=2)
+
+
+# -- bucketing heuristic -----------------------------------------------------
+
+def test_bucket_heuristic_llc_cutoff():
+    assert choose_bucket_size(100_000, 100) == 1          # fits 'LLC'
+    assert choose_bucket_size(1_000_000, 100) == 64       # big n, small d
+    assert choose_bucket_size(1_000_000, 100, force=16) == 16
+    assert choose_bucket_size(1_000_000, 100, force=1) == 1
+
+
+def test_bucket_vmem_budget_shrinks_bucket():
+    # huge d: only small buckets fit the VMEM tile budget
+    assert choose_bucket_size(1_000_000, 100_000) == 8
+
+
+def test_make_plan_divisibility():
+    with pytest.raises(ValueError):
+        make_plan(1_000_001, 100)   # not divisible by chosen bucket
+    plan = make_plan(1_048_576, 100)
+    assert plan.n_buckets * plan.bucket == plan.n
