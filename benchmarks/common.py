@@ -12,7 +12,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import GLMTrainer, SolverConfig
+from repro.core import EngineConfig, GLMTrainer
 from repro.data import (criteo_like, epsilon_like, higgs_like,
                         make_dense_classification,
                         make_sparse_classification)
@@ -40,8 +40,9 @@ def load(name):
     return dict(X=X, y=y, d=X.shape[0], sparse=False, scale=d["scale"])
 
 
-def fit_timed(data, cfg: SolverConfig, *, lam=1e-3, max_epochs=80,
+def fit_timed(data, cfg: EngineConfig, *, lam=1e-3, max_epochs=80,
               tol=1e-3):
+    """cfg: EngineConfig (or legacy SolverConfig; both are accepted)."""
     kw = dict(sparse=True, d=data["d"]) if data["sparse"] else {}
     tr = GLMTrainer(data["X"], data["y"], objective="logistic", lam=lam,
                     cfg=cfg, **kw)

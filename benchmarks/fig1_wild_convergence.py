@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import SolverConfig
+from repro.core import EngineConfig
 from repro.data import (make_dense_classification,
                         make_sparse_classification)
 from .common import emit, fit_timed
@@ -34,7 +34,7 @@ def run(quick: bool = False):
             for k in lanes:
                 if pods * k > 64:
                     continue
-                cfg = SolverConfig(pods=pods, lanes=k, bucket=8,
+                cfg = EngineConfig.make(pods=pods, lanes=k, bucket=8,
                                    partition="dynamic",
                                    aggregation="wild")
                 r = fit_timed(dd, cfg, max_epochs=40)

@@ -8,7 +8,7 @@ claim (shared updates and shuffling limit scaling) is what transfers.
 """
 from __future__ import annotations
 
-from repro.core import SolverConfig
+from repro.core import EngineConfig
 from repro.data import make_dense_classification
 from .common import emit, fit_timed
 
@@ -26,13 +26,13 @@ def run(quick: bool = False):
     # (a) per-epoch-time ablations
     for k in lanes:
         for variant, cfg in (
-            ("wild_shared", SolverConfig(lanes=k, bucket=8,
+            ("wild_shared", EngineConfig.make(lanes=k, bucket=8,
                                          partition="dynamic",
                                          aggregation="wild", chunks=4)),
-            ("sync_per_epoch", SolverConfig(lanes=k, bucket=8,
+            ("sync_per_epoch", EngineConfig.make(lanes=k, bucket=8,
                                             partition="dynamic",
                                             aggregation="adding")),
-            ("no_shuffle", SolverConfig(lanes=k, bucket=8,
+            ("no_shuffle", EngineConfig.make(lanes=k, bucket=8,
                                         partition="static",
                                         aggregation="adding")),
         ):
@@ -44,7 +44,7 @@ def run(quick: bool = False):
 
     # (b) static partitions vs convergence (1 partition per lane)
     for k in ([1, 4, 16] if quick else [1, 2, 4, 8, 16, 32, 64]):
-        cfg = SolverConfig(lanes=k, bucket=8, partition="static")
+        cfg = EngineConfig.make(lanes=k, bucket=8, partition="static")
         r = fit_timed(data, cfg, max_epochs=120)
         rows.append(dict(bench="fig2b", variant="static_partitions",
                          lanes=k,

@@ -3,7 +3,7 @@ rotation) partitioning, (b) buckets on/off, (c) flat vs hierarchical
 pod scheme."""
 from __future__ import annotations
 
-from repro.core import SolverConfig
+from repro.core import EngineConfig
 from .common import DATASETS, emit, fit_timed, load
 
 HEADER = ["bench", "dataset", "variant", "epochs", "converged", "wall_s",
@@ -24,7 +24,7 @@ def run(quick: bool = False):
 
         # (a) partitioning schemes, 16 lanes in one pod
         for mode in ("static", "dynamic", "alltoall", "rotation"):
-            r = fit_timed(data, SolverConfig(
+            r = fit_timed(data, EngineConfig.make(
                 pods=1, lanes=16, bucket=8, partition=mode),
                 max_epochs=120)
             _row(rows, "fig5a", name, mode, r)
@@ -32,16 +32,16 @@ def run(quick: bool = False):
         # (b) buckets on/off (8 lanes, dynamic)
         for bucket, variant in ((1, "bucket_off"), (8, "bucket_8"),
                                 (16, "bucket_16")):
-            r = fit_timed(data, SolverConfig(
+            r = fit_timed(data, EngineConfig.make(
                 pods=1, lanes=8, bucket=bucket, partition="dynamic"),
                 max_epochs=120)
             _row(rows, "fig5b", name, variant, r)
 
         # (c) flat (1 pod x 16) vs hierarchical (4 pods x 4)
         for cfg, variant in (
-            (SolverConfig(pods=1, lanes=16, bucket=8,
+            (EngineConfig.make(pods=1, lanes=16, bucket=8,
                           partition="dynamic"), "flat_16"),
-            (SolverConfig(pods=4, lanes=4, bucket=8,
+            (EngineConfig.make(pods=4, lanes=4, bucket=8,
                           partition="hierarchical"), "hier_4x4"),
         ):
             r = fit_timed(data, cfg, max_epochs=120)
@@ -70,7 +70,7 @@ def run_wire_variants(quick: bool = False):
                                       redeal_frac=0.25,
                                       compress_sync=True)),
     ):
-        r = fit_timed(data, SolverConfig(pods=1, lanes=16, bucket=8,
+        r = fit_timed(data, EngineConfig.make(pods=1, lanes=16, bucket=8,
                                          chunks=4, **kw),
                       max_epochs=120)
         _row(rows, "fig5d", "criteo", variant, r)

@@ -1,0 +1,11 @@
+"""Make `repro` importable from this source checkout without PYTHONPATH.
+
+src/ is prepended unconditionally, so when running pytest from the
+checkout the checkout's code always wins over any installed `repro`
+(tests should test the tree they sit in)."""
+import pathlib
+import sys
+
+_SRC = str(pathlib.Path(__file__).resolve().parent / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

@@ -1,6 +1,11 @@
 """Core: the paper's contribution — system-aware parallel SDCA."""
 from .bucketing import BucketPlan, choose_bucket_size, make_plan
 from .cocoa import SolverConfig, epoch_sim, epoch_sim_sparse
+from .config import (AlgoConfig, DeploymentConfig, EngineConfig,
+                     as_engine_config)
+from .engine import (Collectives, DenseBlock, LocalSolver,
+                     MeshCollectives, SimCollectives, SparseBlock,
+                     make_local_solver, run_epoch, sharded_epoch)
 from .objectives import (HINGE, LOGISTIC, OBJECTIVES, RIDGE, Objective,
                          duality_gap, dual_value, get_objective,
                          primal_value)
@@ -12,6 +17,10 @@ from .trainer import FitResult, GLMTrainer
 __all__ = [
     "BucketPlan", "choose_bucket_size", "make_plan",
     "SolverConfig", "epoch_sim", "epoch_sim_sparse",
+    "AlgoConfig", "DeploymentConfig", "EngineConfig", "as_engine_config",
+    "Collectives", "DenseBlock", "LocalSolver", "MeshCollectives",
+    "SimCollectives", "SparseBlock", "make_local_solver", "run_epoch",
+    "sharded_epoch",
     "HINGE", "LOGISTIC", "OBJECTIVES", "RIDGE", "Objective",
     "duality_gap", "dual_value", "get_objective", "primal_value",
     "PartitionPlan",

@@ -1,47 +1,44 @@
-"""Parallel epoch drivers: wild simulator + domesticated hierarchical CoCoA.
+"""Legacy simulator API: thin wrappers over the unified solver engine.
 
-Two interchangeable drivers run the same per-worker local solver
-(`dense_local_subepoch` / `sparse_local_subepoch`):
+Historically this module held a full vmap epoch driver that duplicated
+the distributed program in `launch/glm.py` (its own re-deal, chunk
+loop, quantized sync and pod reduce).  Both now run
+`core.engine.run_epoch`; what remains here is the flat `SolverConfig`
+(still accepted everywhere) and the `epoch_sim{,_sparse}` signatures,
+kept for compatibility.  New code should use `core.config.EngineConfig`
+and `core.engine` directly.
 
-  * `epoch_sim`   — vmap over (pods x lanes) virtual workers on however
-                    many real devices exist.  Used for convergence studies
-                    and benchmarks on CPU; semantics are bit-identical to
-                    the distributed driver because both are bulk-
-                    synchronous with the same schedules and aggregation.
-  * `make_distributed_epoch` (in repro/launch/glm.py) — shard_map over the
-    real ("pod","data","model") mesh; the vmap axes become mesh axes and
-    the aggregation sums become psums (data axis per sync interval, pod
-    axis per epoch).
-
-Aggregation modes:
+Aggregation modes (paper S3 / DESIGN.md S2):
   wild       sigma'=1, plain sum of worker deltas.  This is the
-             deterministic proxy for Hogwild's stale lock-free updates
-             (DESIGN.md S2): it reproduces wild's behaviour — fine for
-             sparse / few workers, divergent for dense / many workers.
+             deterministic proxy for Hogwild's stale lock-free updates:
+             fine for sparse / few workers, divergent for dense / many.
   adding     sigma'=#workers, sum (CoCoA+ safe aggregation; default).
   averaging  sigma'=1, mean (CoCoA v1; safe but slow).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Literal, Optional
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from . import sdca
-from .bucketing import BucketPlan
+from . import engine
+from .config import Aggregation, EngineConfig
 from .objectives import Objective
-from .partition import PartitionPlan
 
 Array = jax.Array
-Aggregation = Literal["wild", "adding", "averaging"]
+
+__all__ = ["Aggregation", "SolverConfig", "epoch_sim", "epoch_sim_sparse"]
 
 
 @dataclasses.dataclass(frozen=True)
 class SolverConfig:
-    """Knobs of the multi-worker solver (paper S3)."""
+    """Flat knobs of the multi-worker solver (paper S3).
+
+    Deprecated in favour of the layered `EngineConfig` (algo x
+    deployment); `.to_engine()` converts, and every entry point accepts
+    either form.
+    """
     pods: int = 1                   # NUMA nodes -> TPU pods (static outer)
     lanes: int = 1                  # threads -> chips (dynamic inner)
     partition: str = "hierarchical"  # static|dynamic|hierarchical|alltoall
@@ -62,19 +59,14 @@ class SolverConfig:
             return float(self.workers)
         return 1.0
 
-
-def _combine(v0: Array, dv: Array, agg: Aggregation,
-             compress: bool = False) -> Array:
-    """dv: (P, K, d) worker deltas -> new shared vector."""
-    if compress:
-        # model the int8 wire reduction: per-worker quantize/dequantize
-        from repro.optim.compression import compress as q8, dequantize
-        qz, _ = q8(dv, axis=dv.ndim - 1)
-        dv = dequantize(qz)
-    if agg == "averaging":
-        return v0 + dv.mean(axis=(0, 1))
-    # wild and adding both sum; they differ in sigma' used by the workers
-    return v0 + dv.sum(axis=(0, 1))
+    def to_engine(self) -> EngineConfig:
+        return EngineConfig.make(
+            pods=self.pods, lanes=self.lanes, partition=self.partition,
+            aggregation=self.aggregation, bucket=self.bucket,
+            chunks=self.chunks, seed=self.seed,
+            local_solver="pallas" if self.use_kernel else "auto",
+            compress_sync=self.compress_sync,
+            redeal_frac=self.redeal_frac)
 
 
 def epoch_sim(
@@ -84,53 +76,18 @@ def epoch_sim(
     alpha: Array,
     v: Array,
     lam: float,
-    plan: PartitionPlan,
-    bplan: BucketPlan,
-    cfg: SolverConfig,
+    plan,                      # PartitionPlan
+    bplan,                     # BucketPlan
+    cfg,                       # SolverConfig | EngineConfig
     epoch: Array,
     straggler_mask: Optional[Array] = None,   # (P, K) True = worker alive
 ) -> tuple[Array, Array]:
-    """One bulk-synchronous epoch over P*K virtual workers (dense path)."""
-    d, n = X.shape
-    P, K, B = plan.pods, plan.lanes, bplan.bucket
-    lam_n = jnp.asarray(lam * n, X.dtype)
-    sig = jnp.asarray(cfg.sigma_prime(), X.dtype)
+    """One bulk-synchronous epoch over P*K virtual workers (dense path).
 
-    sched = plan.schedule(epoch)                       # (P, K, per_lane)
-    ex = (sched[..., None] * B
-          + jnp.arange(B, dtype=jnp.int32)).reshape(P, K, -1)
-
-    chunks = cfg.chunks
-    per_chunk = ex.shape[-1] // chunks
-    if straggler_mask is None:
-        straggler_mask = jnp.ones((P, K), dtype=bool)
-
-    if cfg.use_kernel:
-        from repro.kernels import ops as kops
-        local = functools.partial(kops.sdca_bucket_subepoch, obj,
-                                  bucket=B)
-    else:
-        local = functools.partial(sdca.dense_local_subepoch, obj, bucket=B)
-
-    def run_chunk(c, state):
-        alpha, v = state
-        ids = jax.lax.dynamic_slice_in_dim(ex, c * per_chunk, per_chunk, 2)
-        Xg = X[:, ids]                                  # (d, P, K, nc)
-        Xg = jnp.moveaxis(Xg, 0, 2)                     # (P, K, d, nc)
-        ag, yg = alpha[ids], y[ids]
-
-        def worker(Xw, yw, aw):
-            return local(Xw, yw, aw, v, lam_n, sig)
-
-        a_new, dv = jax.vmap(jax.vmap(worker))(Xg, yg, ag)
-        mask = straggler_mask
-        a_new = jnp.where(mask[..., None], a_new, ag)
-        dv = dv * mask[..., None].astype(dv.dtype)
-        alpha = alpha.at[ids].set(a_new)
-        v = _combine(v, dv, cfg.aggregation, cfg.compress_sync)
-        return alpha, v
-
-    return jax.lax.fori_loop(0, chunks, run_chunk, (alpha, v))
+    Deprecated shim: forwards to `engine.sim_epoch_dense`.
+    """
+    return engine.sim_epoch_dense(obj, X, y, alpha, v, lam, plan, bplan,
+                                  cfg, epoch, straggler_mask)
 
 
 def epoch_sim_sparse(
@@ -141,25 +98,13 @@ def epoch_sim_sparse(
     alpha: Array,
     v: Array,                  # (d,)
     lam: float,
-    plan: PartitionPlan,
-    bplan: BucketPlan,
-    cfg: SolverConfig,
+    plan,
+    bplan,
+    cfg,
     epoch: Array,
 ) -> tuple[Array, Array]:
-    """Sparse-path epoch (padded CSR); bucketing affects shuffle granularity."""
-    n = y.shape[0]
-    P, K, B = plan.pods, plan.lanes, bplan.bucket
-    lam_n = jnp.asarray(lam * n, val.dtype)
-    sig = jnp.asarray(cfg.sigma_prime(), val.dtype)
-
-    sched = plan.schedule(epoch)
-    ex = (sched[..., None] * B
-          + jnp.arange(B, dtype=jnp.int32)).reshape(P, K, -1)
-
-    def worker(ii, vv, yw, aw):
-        return sdca.sparse_local_subepoch(obj, ii, vv, yw, aw, v, lam_n, sig)
-
-    a_new, dv = jax.vmap(jax.vmap(worker))(idx[ex], val[ex], y[ex], alpha[ex])
-    alpha = alpha.at[ex].set(a_new)
-    v = _combine(v, dv, cfg.aggregation, cfg.compress_sync)
-    return alpha, v
+    """Sparse-path epoch (padded CSR).  Deprecated shim over
+    `engine.sim_epoch_sparse`; unlike the pre-engine driver this now
+    honours `chunks` (v syncs per epoch) on the sparse path too."""
+    return engine.sim_epoch_sparse(obj, idx, val, y, alpha, v, lam, plan,
+                                   bplan, cfg, epoch)

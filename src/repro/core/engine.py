@@ -1,0 +1,723 @@
+"""The solver engine: ONE epoch program for every backend (DESIGN.md S2).
+
+The paper's algorithm — bucketed SDCA + dynamic bucket re-dealing +
+hierarchical aggregation — is a single bulk-synchronous program:
+
+    schedule -> re-deal -> (chunked local sub-epoch) -> sync -> pod-reduce
+
+This module implements that program exactly once (`run_epoch`),
+parametrized by two seams:
+
+  * `Collectives` — how worker axes are realized and how workers talk.
+      - `SimCollectives`: pods x lanes are *virtual* workers stacked on
+        leading array axes of one process (vmap / lax.map lifting,
+        stacked-axis reductions).  Used by `GLMTrainer`, `cocoa.epoch_sim`
+        and every benchmark.
+      - `MeshCollectives`: workers are shards of a ("pod","data","model")
+        device mesh; the same calls become all_to_all / all_gather / psum
+        (used from inside shard_map by `launch/glm.py`).
+  * `LocalSolver` — how one worker solves its chunk: dense XLA
+    (`sdca.dense_local_subepoch`), dense Pallas
+    (`kernels.ops.sdca_bucket_subepoch` — now reachable from the
+    distributed path too), or sparse (`sdca.sparse_local_subepoch`).
+
+Bit-determinism: with `DeploymentConfig.deterministic=True` both
+backends run each worker's sub-epoch UNBATCHED (lax.map in the sim;
+shard programs are unbatched by construction) and reduce with ordered
+gather-sums instead of psum, so `SimCollectives` and `MeshCollectives`
+produce bitwise-identical (alpha, v) for the same (seed, epoch) — the
+property the sim<->mesh equivalence test in tests/test_engine.py pins.
+The contract holds when the simulator's lane axis mirrors the mesh's
+example-parallel layout, i.e. P pods x K data lanes with model=1 (or a
+feature-sharded model axis, which carries no examples).  When workers
+also span 'model' (sparse / narrow-dense meshes with model>1), the
+mesh re-deals only over 'data' within each model group and reduces
+data-then-model, which the flat sim lane axis does not mirror — sim
+runs there are convergence-equivalent, not bitwise.
+
+Worker PRNG streams are derived identically on both backends:
+
+    worker_key = fold(fold(fold(PRNGKey(seed), epoch), pod), lane)
+    re-deal perm   <- fold(worker_key, 0)
+    visit-order    <- fold(worker_key, 1)
+
+with `lane` counted data-major over the example-parallel axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Optional, Protocol, Union
+
+import jax
+import jax.numpy as jnp
+
+from . import sdca
+from .config import AlgoConfig, EngineConfig, as_engine_config
+from .objectives import Objective
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Worker-local data blocks
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseBlock:
+    """Dense worker-local examples: X (*w, d_shard, n_local)."""
+    X: Array
+
+    @property
+    def n_local(self) -> int:
+        return self.X.shape[-1]
+
+    def take(self, cols: Array):
+        return jnp.take_along_axis(self.X, cols[..., None, :], axis=-1)
+
+    def arrs(self):
+        return ((self.X, -1),)
+
+    def rebuild(self, arrs) -> "DenseBlock":
+        return DenseBlock(arrs[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseBlock:
+    """Padded-CSR worker-local examples: idx/val (*w, n_local, nnz)."""
+    idx: Array
+    val: Array
+
+    @property
+    def n_local(self) -> int:
+        return self.idx.shape[-2]
+
+    def take(self, cols: Array):
+        return (jnp.take_along_axis(self.idx, cols[..., :, None], axis=-2),
+                jnp.take_along_axis(self.val, cols[..., :, None], axis=-2))
+
+    def arrs(self):
+        return ((self.idx, -2), (self.val, -2))
+
+    def rebuild(self, arrs) -> "SparseBlock":
+        return SparseBlock(arrs[0], arrs[1])
+
+
+Block = Union[DenseBlock, SparseBlock]
+
+# ---------------------------------------------------------------------------
+# Local solvers (the per-worker sub-epoch)
+# ---------------------------------------------------------------------------
+
+
+class LocalSolver(Protocol):
+    """One worker's pass over its chunk: (data, y, a, v) -> (a_new, dv).
+
+    `data` is an X tile (d_shard, nc) for dense solvers or an
+    (idx, val) row pair for sparse ones; `dv` is the UNSCALED global
+    delta (CoCoA+ convention).
+    """
+
+    def __call__(self, data, y: Array, a: Array, v: Array
+                 ) -> tuple[Array, Array]: ...
+
+
+def dense_xla_solver(obj: Objective, lam_n, sig, bucket: int,
+                     model_axis: Optional[str] = None) -> LocalSolver:
+    def solve(X, y, a, v):
+        return sdca.dense_local_subepoch(
+            obj, X, y, a, v, jnp.asarray(lam_n, X.dtype),
+            jnp.asarray(sig, X.dtype), bucket, model_axis=model_axis)
+    return solve
+
+
+def dense_pallas_solver(obj: Objective, lam_n, sig, bucket: int,
+                        interpret: Optional[bool] = None) -> LocalSolver:
+    from repro.kernels import ops as kops
+
+    def solve(X, y, a, v):
+        return kops.sdca_bucket_subepoch(
+            obj, X, y, a, v, jnp.asarray(lam_n, X.dtype),
+            jnp.asarray(sig, X.dtype), bucket=bucket, interpret=interpret)
+    return solve
+
+
+def sparse_solver(obj: Objective, lam_n, sig) -> LocalSolver:
+    def solve(data, y, a, v):
+        idx, val = data
+        return sdca.sparse_local_subepoch(
+            obj, idx, val, y, a, v, jnp.asarray(lam_n, val.dtype),
+            jnp.asarray(sig, val.dtype))
+    return solve
+
+
+def make_local_solver(kind: str, obj: Objective, lam_n, sig, *,
+                      bucket: int = 1, sparse: bool = False,
+                      model_axis: Optional[str] = None,
+                      interpret: Optional[bool] = None) -> LocalSolver:
+    """Resolve an `AlgoConfig.local_solver` name to a LocalSolver."""
+    if sparse:
+        if kind == "pallas":
+            raise ValueError("the Pallas bucket kernel is dense-only; "
+                             "sparse workloads use the gather/scatter path")
+        return sparse_solver(obj, lam_n, sig)
+    if kind == "auto":
+        kind = "xla"
+    if kind == "pallas":
+        if model_axis is not None:
+            raise ValueError("local_solver='pallas' does not support "
+                             "feature sharding (model-axis psum) yet")
+        return dense_pallas_solver(obj, lam_n, sig, bucket,
+                                   interpret=interpret)
+    if kind != "xla":
+        raise ValueError(f"unknown local_solver {kind!r}")
+    return dense_xla_solver(obj, lam_n, sig, bucket, model_axis=model_axis)
+
+
+# ---------------------------------------------------------------------------
+# Wire compression helpers (the ONLY home of this logic)
+# ---------------------------------------------------------------------------
+
+
+def q_psum(x: Array, axis_name: str, size: int) -> Array:
+    """int8 two-phase reduction over `axis_name` (quantized
+    reduce-scatter then quantized all-gather): ~2 bytes/element on the
+    wire instead of all-reduce's ~8 — the glm-criteo SPerf iteration.
+    """
+    from repro.optim.compression import compress
+    if size <= 1:
+        return x
+    n = x.shape[0]
+    pad = (-n) % size
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    qz, _ = compress(x)
+    # phase 1: exchange int8 shards, sum locally in f32
+    shards = jax.lax.all_to_all(
+        qz.q.reshape(size, -1), axis_name, split_axis=0, concat_axis=0,
+        tiled=False)                                  # (size, n/size)
+    scales = jax.lax.all_gather(qz.scale, axis_name)  # (size,)
+    part = jnp.sum(shards.astype(jnp.float32)
+                   * scales.reshape(size, 1), axis=0)  # my shard, reduced
+    # phase 2: int8 all-gather of the reduced shards
+    qz2, _ = compress(part)
+    q_all = jax.lax.all_gather(qz2.q, axis_name)       # (size, n/size)
+    s_all = jax.lax.all_gather(qz2.scale, axis_name)
+    out = (q_all.astype(jnp.float32)
+           * s_all.reshape(size, 1)).reshape(x.shape)
+    return out[:n] if pad else out
+
+
+def _quantize_roundtrip(x: Array, axis: int) -> Array:
+    """Model the int8 wire: per-worker quantize/dequantize along `axis`."""
+    from repro.optim.compression import compress, dequantize
+    qz, _ = compress(x, axis=axis)
+    return dequantize(qz)
+
+
+# ---------------------------------------------------------------------------
+# Collectives backends
+# ---------------------------------------------------------------------------
+
+
+class Collectives(Protocol):
+    """How worker axes are realized and how workers communicate.
+
+    `wshape` is the leading stacked worker shape of every array the
+    engine touches: (pods, lanes) for the simulator, () inside a
+    shard_map where each program instance IS one worker.
+    """
+    wshape: tuple[int, ...]
+
+    def worker_keys(self, seed: int, epoch): ...
+    def map_workers(self, fn: Callable, args: tuple): ...
+    def visit_perms(self, keys, nb_local: int): ...
+    def broadcast_ids(self, ids: Array): ...
+    def redeal(self, arrs, nb_local: int, keys, frac: float): ...
+    def pod_replicate(self, v: Array): ...
+    def worker_view(self, v: Array): ...
+    def lane_sum(self, dv: Array, compress: bool = False): ...
+    def pod_reduce(self, v_new: Array, v_in: Array): ...
+
+
+@dataclasses.dataclass(frozen=True)
+class SimCollectives:
+    """pods x lanes virtual workers stacked on leading array axes.
+
+    deterministic=True runs each worker's sub-epoch unbatched via
+    lax.map (identical HLO to a mesh shard program) instead of vmap;
+    reductions are ordered sums either way.
+    """
+    pods: int = 1
+    lanes: int = 1
+    deterministic: bool = False
+    compress_pod: bool = False
+
+    @property
+    def wshape(self) -> tuple[int, ...]:
+        return (self.pods, self.lanes)
+
+    def worker_keys(self, seed, epoch):
+        base = jax.random.fold_in(jax.random.PRNGKey(seed),
+                                  jnp.asarray(epoch, jnp.int32))
+        pods = jnp.arange(self.pods, dtype=jnp.int32)
+        lanes = jnp.arange(self.lanes, dtype=jnp.int32)
+        per_pod = jax.vmap(lambda p: jax.random.fold_in(base, p))(pods)
+        return jax.vmap(lambda kp: jax.vmap(
+            lambda l: jax.random.fold_in(kp, l))(lanes))(per_pod)
+
+    def _flat(self, tree):
+        W = self.pods * self.lanes
+        return jax.tree.map(lambda x: x.reshape((W,) + x.shape[2:]), tree)
+
+    def _unflat(self, tree):
+        return jax.tree.map(
+            lambda x: x.reshape((self.pods, self.lanes) + x.shape[1:]),
+            tree)
+
+    def map_workers(self, fn, args):
+        flat = self._flat(args)
+        if self.deterministic:
+            out = jax.lax.map(lambda xs: fn(*xs), flat)
+        else:
+            out = jax.vmap(fn)(*flat)
+        return self._unflat(out)
+
+    def visit_perms(self, keys, nb_local):
+        def one(k):
+            return jax.random.permutation(
+                jax.random.fold_in(k, 1), nb_local).astype(jnp.int32)
+        return self._unflat(jax.vmap(one)(self._flat(keys)))
+
+    def broadcast_ids(self, ids):
+        return jnp.broadcast_to(ids, self.wshape + ids.shape)
+
+    def redeal(self, arrs, nb_local, keys, frac):
+        """Stacked mirror of the mesh all-to-all bucket re-deal: each
+        lane shuffles its buckets (per-worker key), the first `exch`
+        buckets are split K ways and transposed across the lane axis —
+        pure data movement, bitwise-identical to lax.all_to_all."""
+        P, K = self.pods, self.lanes
+        if K <= 1 or frac <= 0:
+            return tuple(x for x, _ in arrs)
+        exch = max(int(nb_local * frac) // K * K, K)
+
+        def pkey(k):
+            return jax.random.permutation(
+                jax.random.fold_in(k, 0), nb_local).astype(jnp.int32)
+        perms = self._unflat(jax.vmap(pkey)(self._flat(keys)))  # (P,K,nb)
+
+        def one(x, ax):
+            xb = jnp.moveaxis(x, ax, 2)            # (P, K, n_local, ...)
+            shp = xb.shape
+            rows = shp[2] // nb_local
+            rest = shp[3:]
+            xb = xb.reshape((P, K, nb_local, rows) + rest)
+            idx = perms.reshape((P, K, nb_local)
+                                + (1,) * (xb.ndim - 3))
+            xb = jnp.take_along_axis(xb, idx, axis=2)
+            head = xb[:, :, :exch]
+            # lane j receives [split_j of lane 0, ..., split_j of lane
+            # K-1] concatenated in lane order == tiled all_to_all
+            head = head.reshape((P, K, K, exch // K, rows) + rest)
+            head = head.swapaxes(1, 2)
+            head = head.reshape((P, K, exch, rows) + rest)
+            xb = jnp.concatenate([head, xb[:, :, exch:]], axis=2)
+            return jnp.moveaxis(xb.reshape(shp), 2, ax)
+
+        return tuple(one(x, ax) for x, ax in arrs)
+
+    def pod_replicate(self, v):
+        if v.ndim == 1:
+            return jnp.broadcast_to(v, (self.pods,) + v.shape)
+        return v
+
+    def worker_view(self, v):
+        # (P, d) pod replicas -> (P, K, d) per-worker replicas
+        return jnp.broadcast_to(v[:, None, :],
+                                (self.pods, self.lanes, v.shape[-1]))
+
+    def lane_sum(self, dv, compress=False):
+        """(P, K, d) worker deltas -> (P, d) per-pod ordered sums."""
+        if compress:
+            dv = _quantize_roundtrip(dv, axis=dv.ndim - 1)
+        # per-pod (K, d) sum over axis 0: the same reduction the mesh
+        # backend performs on its all_gather'd stack (bit-stable).
+        return jnp.stack([jnp.sum(dv[p], axis=0)
+                          for p in range(self.pods)])
+
+    def pod_reduce(self, v_pods, v_in):
+        if self.pods == 1:
+            return v_pods[0]
+        deltas = v_pods - v_in
+        if self.compress_pod:
+            deltas = _quantize_roundtrip(deltas, axis=deltas.ndim - 1)
+        return v_in[0] + jnp.sum(deltas, axis=0)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCollectives:
+    """Real collectives over a ("pod","data","model") mesh; every
+    method body runs INSIDE shard_map, where this program instance is
+    one worker and its arrays are the local shards."""
+    lane_axes: tuple[str, ...]            # example-parallel, data-major
+    sync_axes: tuple[str, ...]            # chunk-sync reduction axes
+    axis_sizes: Mapping[str, int]
+    pod_axis: Optional[str] = None
+    redeal_axis: Optional[str] = "data"
+    deterministic: bool = False
+    compress_pod: bool = False
+
+    wshape: tuple[int, ...] = ()
+
+    def _pod_size(self) -> int:
+        return self.axis_sizes.get(self.pod_axis, 1) if self.pod_axis else 1
+
+    def worker_keys(self, seed, epoch):
+        base = jax.random.fold_in(jax.random.PRNGKey(seed),
+                                  jnp.asarray(epoch, jnp.int32))
+        pod = (jax.lax.axis_index(self.pod_axis).astype(jnp.int32)
+               if self.pod_axis else jnp.int32(0))
+        kp = jax.random.fold_in(base, pod)
+        lane = jnp.int32(0)
+        for ax in self.lane_axes:
+            lane = lane * self.axis_sizes[ax] \
+                + jax.lax.axis_index(ax).astype(jnp.int32)
+        return jax.random.fold_in(kp, lane)
+
+    def map_workers(self, fn, args):
+        return fn(*args)
+
+    def visit_perms(self, keys, nb_local):
+        return jax.random.permutation(
+            jax.random.fold_in(keys, 1), nb_local).astype(jnp.int32)
+
+    def broadcast_ids(self, ids):
+        return ids
+
+    def redeal(self, arrs, nb_local, keys, frac):
+        """Balanced all-to-all bucket re-deal over the data axis (the
+        paper's dynamic partitioning, TPU-native; O(local data) ICI).
+        A ring rotation of whole blocks was tried first and REFUTED —
+        see core/partition.py."""
+        ax_name = self.redeal_axis
+        size = self.axis_sizes.get(ax_name, 1) if ax_name else 1
+        if size <= 1 or frac <= 0:
+            return tuple(x for x, _ in arrs)
+        perm = jax.random.permutation(
+            jax.random.fold_in(keys, 0), nb_local).astype(jnp.int32)
+        exch = max(int(nb_local * frac) // size * size, size)
+
+        def one(x, ax):
+            xb = jnp.moveaxis(x, ax, 0)        # (n_local, ...)
+            shp = xb.shape
+            rows = shp[0] // nb_local
+            rest = shp[1:]
+            xb = xb.reshape((nb_local, rows) + rest)[perm]
+            head = xb[:exch].reshape((exch * rows,) + rest)
+            head = jax.lax.all_to_all(head, ax_name, split_axis=0,
+                                      concat_axis=0, tiled=True)
+            xb = jnp.concatenate(
+                [head.reshape((exch, rows) + rest), xb[exch:]], axis=0)
+            return jnp.moveaxis(xb.reshape(shp), 0, ax)
+
+        return tuple(one(x, ax) for x, ax in arrs)
+
+    def pod_replicate(self, v):
+        return v
+
+    def worker_view(self, v):
+        return v
+
+    def lane_sum(self, dv, compress=False):
+        for ax in self.sync_axes:
+            size = self.axis_sizes.get(ax, 1)
+            if size <= 1:
+                continue
+            if compress:
+                dv = q_psum(dv, ax, size)
+            elif self.deterministic:
+                # ordered gather-sum: bit-stable and identical to the
+                # simulator's stacked reduction
+                dv = jnp.sum(jax.lax.all_gather(dv, ax), axis=0)
+            else:
+                dv = jax.lax.psum(dv, ax)
+        return dv
+
+    def pod_reduce(self, v_new, v_in):
+        """Cross-pod combine of per-pod v deltas (optionally int8)."""
+        if self._pod_size() <= 1:
+            return v_new
+        dv = v_new - v_in
+        if self.compress_pod:
+            from repro.optim.compression import compress
+            qz, _err = compress(dv)    # EF residual handled by caller state
+            q_all = jax.lax.all_gather(qz.q, self.pod_axis)  # int8 wire
+            s_all = jax.lax.all_gather(qz.scale, self.pod_axis)
+            dv_sum = jnp.sum(q_all.astype(jnp.float32)
+                             * s_all.reshape((-1,) + (1,) * dv.ndim),
+                             axis=0)
+        elif self.deterministic:
+            dv_sum = jnp.sum(jax.lax.all_gather(dv, self.pod_axis), axis=0)
+        else:
+            dv_sum = jax.lax.psum(dv, self.pod_axis)
+        return v_in + dv_sum
+
+
+# ---------------------------------------------------------------------------
+# The epoch program (the only copy)
+# ---------------------------------------------------------------------------
+
+
+def _put_cols(a: Array, cols: Array, vals: Array) -> Array:
+    """alpha[..., cols] = vals with optional leading worker axes."""
+    if a.ndim == 1:
+        return a.at[cols].set(vals)
+    lead = a.shape[:-1]
+    fa = a.reshape((-1, a.shape[-1]))
+    fc = cols.reshape((-1, cols.shape[-1]))
+    fv = vals.reshape((-1, vals.shape[-1]))
+    out = jax.vmap(lambda ai, ci, vi: ai.at[ci].set(vi))(fa, fc, fv)
+    return out.reshape(lead + (a.shape[-1],))
+
+
+def run_epoch(
+    coll: Collectives,
+    solver: LocalSolver,
+    algo: AlgoConfig,
+    block: Block,
+    y: Array,
+    a: Array,
+    v: Array,
+    epoch,
+    *,
+    straggler_mask: Optional[Array] = None,   # (*wshape) True = alive
+    redeal: bool = True,
+    visit_shuffle: bool = True,
+    dv_scale: float = 1.0,
+) -> tuple[Block, Array, Array, Array]:
+    """One bulk-synchronous epoch over worker-local data.
+
+    schedule/re-deal -> per-chunk: local sub-epoch, straggler mask,
+    lane sync -> per-epoch: pod reduce.  Returns the (possibly
+    re-dealt) block and labels so physical layouts persist across
+    epochs, plus updated (alpha_local, v).
+    """
+    n_local = block.n_local
+    B = algo.bucket
+    if n_local % B:
+        raise ValueError(f"n_local={n_local} not divisible by bucket={B}")
+    nb_local = n_local // B
+    chunks = algo.chunks
+    if nb_local % chunks:
+        raise ValueError(
+            f"chunks={chunks} must divide local bucket count {nb_local}")
+    per_chunk = nb_local // chunks
+
+    keys = coll.worker_keys(algo.seed, epoch)
+    if redeal:
+        arrs = block.arrs() + ((y, -1), (a, -1))
+        out = coll.redeal(arrs, nb_local, keys, algo.redeal_frac)
+        nblk = len(block.arrs())
+        block = block.rebuild(out[:nblk])
+        y, a = out[nblk], out[nblk + 1]
+    if visit_shuffle:
+        perm = coll.visit_perms(keys, nb_local)
+    else:
+        perm = coll.broadcast_ids(jnp.arange(nb_local, dtype=jnp.int32))
+
+    v = coll.pod_replicate(v)
+    v_in = v
+    barange = jnp.arange(B, dtype=jnp.int32)
+
+    def chunk(c, carry):
+        a_c, v_c = carry
+        ids = jax.lax.slice_in_dim(
+            perm, c * per_chunk, (c + 1) * per_chunk, axis=perm.ndim - 1)
+        cols = (ids[..., None] * B + barange).reshape(
+            ids.shape[:-1] + (per_chunk * B,))
+        data = block.take(cols)
+        yc = jnp.take_along_axis(y, cols, -1)
+        ac = jnp.take_along_axis(a_c, cols, -1)
+        a_new, dv = coll.map_workers(solver,
+                                     (data, yc, ac, coll.worker_view(v_c)))
+        if straggler_mask is not None:
+            a_new = jnp.where(straggler_mask[..., None], a_new, ac)
+            dv = dv * straggler_mask[..., None].astype(dv.dtype)
+        if dv_scale != 1.0:
+            dv = dv * jnp.asarray(dv_scale, dv.dtype)
+        v_c = v_c + coll.lane_sum(dv, compress=algo.compress_sync)
+        return _put_cols(a_c, cols, a_new), v_c
+
+    # The chunk loop is unrolled (chunks is a small static count, <= ~8).
+    # A lax.fori_loop here MISCOMPILES under shard_map on current jax:
+    # closed-over values derived from axis_index (the per-lane visit
+    # perm) are treated as loop-invariant-replicated and every lane
+    # silently runs lane 0's visit order — the pre-engine distributed
+    # driver had exactly this latent bug.  The sim<->mesh equivalence
+    # test (tests/test_engine.py) pins the fixed behaviour.
+    for c in range(chunks):
+        a, v = chunk(c, (a, v))
+    v = coll.pod_reduce(v, v_in)
+    return block, y, a, v
+
+
+def sharded_epoch(
+    obj: Objective,
+    spec: EngineConfig,
+    coll: Collectives,
+    block: Block,
+    y: Array,
+    a: Array,
+    v: Array,
+    epoch,
+    *,
+    lam: float,
+    n_total: int,
+    workers: int,
+    model_axis: Optional[str] = None,
+    interpret: Optional[bool] = None,
+) -> tuple[Block, Array, Array, Array]:
+    """Epoch over a *physically partitioned* workload (the distributed
+    layout): partition != 'static' re-deals buckets across lanes, the
+    visit order is a fresh per-worker shuffle.  Works with either
+    collectives backend — this is the program the sim<->mesh
+    equivalence test runs on both."""
+    algo = spec.algo
+    lam_n = lam * n_total
+    sig = spec.sigma_prime(workers)
+    solver = make_local_solver(
+        algo.local_solver, obj, lam_n, sig, bucket=algo.bucket,
+        sparse=isinstance(block, SparseBlock), model_axis=model_axis,
+        interpret=interpret)
+    dv_scale = (1.0 / workers if algo.aggregation == "averaging" else 1.0)
+    return run_epoch(
+        coll, solver, algo, block, y, a, v, epoch,
+        redeal=(algo.partition != "static"), visit_shuffle=True,
+        dv_scale=dv_scale)
+
+
+# ---------------------------------------------------------------------------
+# Simulator entry points (global arrays, schedule-based partitioning)
+# ---------------------------------------------------------------------------
+
+
+def _sim_gather(plan, bucket: int, epoch):
+    """(P, K, n_local) global example ids for this epoch's schedule."""
+    sched = plan.schedule(epoch)                       # (P, K, per_lane)
+    return (sched[..., None] * bucket
+            + jnp.arange(bucket, dtype=jnp.int32)).reshape(
+                plan.pods, plan.lanes, -1)
+
+
+def _sim_coll(spec: EngineConfig) -> SimCollectives:
+    dep = spec.deployment
+    return SimCollectives(pods=dep.pods, lanes=dep.lanes,
+                          deterministic=dep.deterministic,
+                          compress_pod=dep.compress_pod)
+
+
+def sim_epoch_dense(
+    obj: Objective,
+    X: Array,                  # (d, n) dense, global
+    y: Array,
+    alpha: Array,
+    v: Array,
+    lam: float,
+    plan,                      # PartitionPlan
+    bplan,                     # BucketPlan
+    spec,                      # EngineConfig (or anything .to_engine())
+    epoch,
+    straggler_mask: Optional[Array] = None,
+) -> tuple[Array, Array]:
+    """One simulated epoch over P*K virtual workers (dense path).
+
+    Partitioning comes from `plan.schedule` (static/dynamic/
+    hierarchical/rotation/alltoall as index math on the global arrays);
+    the engine then runs the exact same chunk/sync/pod-reduce program
+    as the distributed launcher.
+
+    Cost note: the epoch's schedule is gathered once up front, so the
+    jitted epoch holds one extra X-sized permuted copy (the distributed
+    path never does this — its layout is physical).  At simulator
+    scale (CPU, n <= a few hundred k) this is the right trade for
+    sharing the engine's chunk loop verbatim.
+    """
+    spec = as_engine_config(spec)
+    d, n = X.shape
+    B = bplan.bucket
+    ex = _sim_gather(plan, B, epoch)                   # (P, K, n_local)
+    Xl = jnp.transpose(X[:, ex], (1, 2, 0, 3))         # (P, K, d, n_local)
+    coll = _sim_coll(spec)
+    W = plan.pods * plan.lanes
+    solver = make_local_solver(
+        spec.algo.local_solver, obj, lam * n, spec.sigma_prime(W),
+        bucket=B)
+    dv_scale = (1.0 / W if spec.algo.aggregation == "averaging" else 1.0)
+    _, _, a_new, v_new = run_epoch(
+        coll, solver, spec.algo, DenseBlock(Xl), y[ex], alpha[ex], v,
+        epoch, straggler_mask=straggler_mask, redeal=False,
+        visit_shuffle=False, dv_scale=dv_scale)
+    return alpha.at[ex].set(a_new), v_new
+
+
+def sim_epoch_sparse(
+    obj: Objective,
+    idx: Array,                # (n, nnz) int32, global
+    val: Array,                # (n, nnz)
+    y: Array,
+    alpha: Array,
+    v: Array,                  # (d,)
+    lam: float,
+    plan,
+    bplan,
+    spec,
+    epoch,
+    straggler_mask: Optional[Array] = None,
+) -> tuple[Array, Array]:
+    """Sparse-path simulated epoch (padded CSR)."""
+    spec = as_engine_config(spec)
+    n = y.shape[0]
+    B = bplan.bucket
+    ex = _sim_gather(plan, B, epoch)
+    coll = _sim_coll(spec)
+    W = plan.pods * plan.lanes
+    solver = make_local_solver(
+        spec.algo.local_solver, obj, lam * n, spec.sigma_prime(W),
+        sparse=True)
+    dv_scale = (1.0 / W if spec.algo.aggregation == "averaging" else 1.0)
+    _, _, a_new, v_new = run_epoch(
+        coll, solver, spec.algo, SparseBlock(idx[ex], val[ex]), y[ex],
+        alpha[ex], v, epoch, straggler_mask=straggler_mask, redeal=False,
+        visit_shuffle=False, dv_scale=dv_scale)
+    return alpha.at[ex].set(a_new), v_new
+
+
+# ---------------------------------------------------------------------------
+# Simulator entry points (physically partitioned layout)
+# ---------------------------------------------------------------------------
+
+
+def sim_sharded_dense_epoch(obj, spec, X, y, a, v, epoch, *,
+                            lam: float, n_total: int):
+    """Distributed-layout epoch on stacked sim workers: X (P, K, d,
+    n_local).  Mirrors make_dense_epoch exactly (same keys, same
+    re-deal, same sums) — the sim side of the equivalence test.
+    Bitwise-identical to the mesh when K mirrors its data axis
+    (model=1 or feature-sharded; see module docstring)."""
+    spec = as_engine_config(spec)
+    coll = _sim_coll(spec)
+    blk, y, a, v = sharded_epoch(
+        obj, spec, coll, DenseBlock(X), y, a, v, epoch, lam=lam,
+        n_total=n_total, workers=spec.workers)
+    return blk.X, y, a, v
+
+
+def sim_sharded_sparse_epoch(obj, spec, idx, val, y, a, v, epoch, *,
+                             lam: float, n_total: int):
+    """Sparse twin of sim_sharded_dense_epoch: idx/val (P, K, nl, nnz)."""
+    spec = as_engine_config(spec)
+    coll = _sim_coll(spec)
+    blk, y, a, v = sharded_epoch(
+        obj, spec, coll, SparseBlock(idx, val), y, a, v, epoch, lam=lam,
+        n_total=n_total, workers=spec.workers)
+    return blk.idx, blk.val, y, a, v

@@ -15,9 +15,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import cocoa, objectives, sdca
+from . import engine, objectives
 from .bucketing import BucketPlan, make_plan
 from .cocoa import SolverConfig
+from .config import EngineConfig, as_engine_config
 from .objectives import Objective, get_objective
 from .partition import PartitionPlan
 
@@ -46,13 +47,15 @@ class GLMTrainer:
     """
 
     def __init__(self, X, y, *, objective: str | Objective = "logistic",
-                 lam: float = 1e-3, cfg: SolverConfig = SolverConfig(),
+                 lam: float = 1e-3,
+                 cfg: SolverConfig | EngineConfig = SolverConfig(),
                  sparse: bool = False, d: Optional[int] = None,
                  bucket_force: Optional[int] = None):
         self.obj = (objective if isinstance(objective, Objective)
                     else get_objective(objective))
         self.lam = float(lam)
         self.cfg = cfg
+        self.spec = as_engine_config(cfg)
         self.sparse = sparse
         if sparse:
             idx, val = X
@@ -65,12 +68,13 @@ class GLMTrainer:
             self.d, self.n = self.X.shape
         self.y = jnp.asarray(y)
 
-        force = bucket_force if bucket_force is not None else cfg.bucket
+        algo, dep = self.spec.algo, self.spec.deployment
+        force = bucket_force if bucket_force is not None else algo.bucket
         self.bplan = make_plan(self.n, self.d, force=force or 1)
         self.plan = PartitionPlan(
-            n_buckets=self.bplan.n_buckets, pods=cfg.pods, lanes=cfg.lanes,
-            mode=cfg.partition, seed=cfg.seed,
-            redeal_frac=cfg.redeal_frac)
+            n_buckets=self.bplan.n_buckets, pods=dep.pods, lanes=dep.lanes,
+            mode=algo.partition, seed=algo.seed,
+            redeal_frac=algo.redeal_frac)
 
         self.alpha = jnp.zeros(self.n, jnp.float32)
         self.v = jnp.zeros(self.d, jnp.float32)
@@ -78,14 +82,14 @@ class GLMTrainer:
 
         if sparse:
             self._epoch_fn = jax.jit(
-                lambda a, v, e: cocoa.epoch_sim_sparse(
+                lambda a, v, e: engine.sim_epoch_sparse(
                     self.obj, self.idx, self.val, self.y, a, v, self.lam,
-                    self.plan, self.bplan, self.cfg, e))
+                    self.plan, self.bplan, self.spec, e))
         else:
             self._epoch_fn = jax.jit(
-                lambda a, v, e: cocoa.epoch_sim(
+                lambda a, v, e: engine.sim_epoch_dense(
                     self.obj, self.X, self.y, a, v, self.lam,
-                    self.plan, self.bplan, self.cfg, e))
+                    self.plan, self.bplan, self.spec, e))
 
     # -- diagnostics ------------------------------------------------------
     def gap(self) -> float:

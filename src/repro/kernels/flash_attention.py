@@ -27,6 +27,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both.
+_compiler_params = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
+
 NEG_INF = -1e30
 
 
@@ -120,7 +125,7 @@ def flash_attention_kernel(q, k, v, *, kind: str = "causal",
             pltpu.VMEM((bq, 1), jnp.float32),      # l
             pltpu.VMEM((bq, hd_v), jnp.float32),   # acc
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

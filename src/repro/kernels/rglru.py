@@ -24,6 +24,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both.
+_compiler_params = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
+
 _C = 8.0
 
 
@@ -90,7 +95,7 @@ def rglru_kernel(x, a_log, gate_a, gate_x, h0, *, block_t: int = 128,
             jax.ShapeDtypeStruct((T, D), x.dtype),
             jax.ShapeDtypeStruct((1, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compiler_params(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(x, gate_a, gate_x, a_log.reshape(1, D), h0.reshape(1, D))

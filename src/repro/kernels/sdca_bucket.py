@@ -29,6 +29,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both.
+_compiler_params = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
+
 from repro.core.objectives import Objective
 
 Array = jax.Array
@@ -111,7 +116,7 @@ def sdca_bucket_kernel(obj: Objective, xb: Array, yb: Array, ab: Array,
             jax.ShapeDtypeStruct((d_pad, 1), jnp.float32),
         ],
         input_output_aliases={4: 1},   # v0 buffer reused as v_final
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compiler_params(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(xb, yb, ab, scal, v0)

@@ -1,45 +1,47 @@
-"""Distributed GLM training: the paper's algorithm as a 3-axis SPMD program.
+"""Distributed GLM training: the solver engine as a 3-axis SPMD program.
 
 shard_map over ("pod","data","model") implements the paper's hierarchy
-with real collectives (DESIGN.md S2):
+with real collectives (DESIGN.md S2).  The epoch program itself —
+re-deal -> chunked local sub-epoch -> sync -> pod reduce — lives in
+`repro.core.engine` and is shared verbatim with the vmap simulator;
+this module only binds it to a mesh:
 
   * static partition of examples across pods — data never crosses the
     pod interconnect; only the d-sized v delta does, once per epoch
     (optionally int8 error-feedback compressed: 4x fewer wire bytes);
   * DYNAMIC partition within a pod — every epoch each lane shuffles its
     buckets locally, splits them into K groups and exchanges via ONE
-    balanced all-to-all over 'data', so each new per-lane block mixes
-    buckets from every old block (the TPU-native form of the paper's
-    re-shuffling, O(local data) ICI cost).  NOTE: a cheaper ring
-    rotation of whole blocks was tried first and REFUTED — rotating
-    ownership of fixed blocks leaves the subproblem sets unchanged and
-    converges like static (see core/partition.py + EXPERIMENTS.md);
+    balanced all-to-all over 'data' (`MeshCollectives.redeal`); a ring
+    rotation of whole blocks was tried first and REFUTED — see
+    core/partition.py + EXPERIMENTS.md;
   * feature sharding over 'model' (TP) for wide datasets — per-bucket
     Gram/margin partial sums are psum'd, amortizing ONE model-axis
     collective over B coordinates (the bucket optimization's TP payoff);
-  * v replicas sync over 'data' once per chunk (sync_interval), so
-    compute and the data-axis psum interleave across chunks.
+  * v replicas sync over 'data' once per chunk, so compute and the
+    data-axis reduction interleave across chunks.
 
 Workers = pods x data-lanes (x model-lanes too when features are
 replicated — narrow datasets use the whole mesh as example-parallel
 workers).  sigma' = #workers (CoCoA+ additive aggregation).
+
+`GLMScale.local_solver="pallas"` routes each worker's dense sub-epoch
+through the Pallas bucket kernel (kernels/sdca_bucket.py) instead of
+the XLA scan — the same `LocalSolver` seam the simulator uses.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import sdca
+from repro.core import engine
+from repro.core.config import AlgoConfig, DeploymentConfig, EngineConfig
 from repro.core.objectives import LOGISTIC, Objective
-from repro.optim.compression import compress
 
 # check_vma=False: v is *mathematically* invariant over unmentioned axes
-# (every lane adds the same psum'd delta to the same replica), but the
+# (every lane adds the same reduced delta to the same replica), but the
 # static VMA tracker cannot see through the chunked carry + the int8
 # all-gather pod reduce, so we assert replication via out_specs instead.
 try:
@@ -71,6 +73,25 @@ class GLMScale:
     compress_pod: bool = True     # int8 EF for the cross-pod reduce
     compress_sync: bool = False   # int8 two-phase data-axis dv reduction
     redeal_frac: float = 1.0      # bucket fraction re-dealt per epoch
+    local_solver: str = "auto"    # auto|xla|pallas (engine LocalSolver)
+    deterministic: bool = False   # ordered gather-sums (bit-stable)
+
+    def engine_config(self, mesh=None) -> EngineConfig:
+        """The layered engine view of this workload's solver knobs."""
+        dep = DeploymentConfig(
+            pods=mesh.shape.get("pod", 1) if mesh is not None else 1,
+            lanes=(_worker_count(mesh, self)
+                   // mesh.shape.get("pod", 1)) if mesh is not None else 1,
+            feature_shard=self.feature_shard,
+            compress_pod=self.compress_pod,
+            deterministic=self.deterministic)
+        return EngineConfig(
+            algo=AlgoConfig(bucket=self.bucket, chunks=self.chunks,
+                            aggregation="adding", partition="alltoall",
+                            redeal_frac=self.redeal_frac,
+                            local_solver=self.local_solver,
+                            compress_sync=self.compress_sync, seed=0),
+            deployment=dep)
 
 
 GLM_CONFIGS = {
@@ -115,132 +136,32 @@ def _worker_count(mesh, scale: GLMScale) -> int:
     return n
 
 
-def _q_psum(x, axis_name: str, size: int):
-    """int8 two-phase reduction over `axis_name` (quantized
-    reduce-scatter then quantized all-gather): ~2 bytes/element on the
-    wire instead of all-reduce's ~8 — the glm-criteo SPerf iteration.
-    """
-    if size <= 1:
-        return x
-    n = x.shape[0]
-    pad = (-n) % size
-    if pad:
-        x = jnp.pad(x, (0, pad))
-    qz, _ = compress(x)
-    # phase 1: exchange int8 shards, sum locally in f32
-    shards = jax.lax.all_to_all(
-        qz.q.reshape(size, -1), axis_name, split_axis=0, concat_axis=0,
-        tiled=False)                                  # (size, n/size)
-    scales = jax.lax.all_gather(qz.scale, axis_name)  # (size,)
-    part = jnp.sum(shards.astype(jnp.float32)
-                   * scales.reshape(size, 1), axis=0)  # my shard, reduced
-    # phase 2: int8 all-gather of the reduced shards
-    qz2, _ = compress(part)
-    q_all = jax.lax.all_gather(qz2.q, axis_name)       # (size, n/size)
-    s_all = jax.lax.all_gather(qz2.scale, axis_name)
-    out = (q_all.astype(jnp.float32)
-           * s_all.reshape(size, 1)).reshape(x.shape)
-    return out[:n] if pad else out
-
-
-def _redeal(arrs, axis_name: str, size: int, nb: int, key,
-            frac: float = 1.0):
-    """Balanced all-to-all bucket re-deal over `axis_name` (the paper's
-    dynamic partitioning, TPU-native).
-
-    arrs: tuple of (array, example_axis); the example axis holds n_local
-    examples grouped in `nb` equal buckets.  Each lane shuffles its
-    buckets locally (per-chip key), then a tiled all-to-all sends the
-    g-th slice to lane g — every new block mixes buckets drawn from
-    every old block.  frac < 1 exchanges only that fraction of buckets
-    (fewer wire bytes, slightly more epochs — fig5a / SPerf).
-    """
-    if size <= 1 or frac <= 0:
-        return tuple(x for x, _ in arrs)
-    perm = jax.random.permutation(key, nb).astype(jnp.int32)
-    exch = max(int(nb * frac) // size * size, size)
-
-    def one(x, example_axis):
-        xb = jnp.moveaxis(x, example_axis, 0)      # (n_local, ...)
-        shp = xb.shape
-        rows = shp[0] // nb
-        xb = xb.reshape((nb, rows) + shp[1:])[perm]
-        head = xb[:exch].reshape((exch * rows,) + shp[1:])
-        head = jax.lax.all_to_all(head, axis_name, split_axis=0,
-                                  concat_axis=0, tiled=True)
-        xb = jnp.concatenate(
-            [head.reshape((exch, rows) + shp[1:]), xb[exch:]], axis=0)
-        return jnp.moveaxis(xb.reshape(shp), 0, example_axis)
-
-    return tuple(one(x, ax) for x, ax in arrs)
-
-
-def _pod_reduce(v_new, v_in, has_pod: bool, compress_pod: bool):
-    """Cross-pod combine of per-pod v deltas (optionally int8 EF)."""
-    if not has_pod:
-        return v_new
-    dv = v_new - v_in
-    if compress_pod:
-        qz, _err = compress(dv)        # EF residual handled by caller state
-        q_all = jax.lax.all_gather(qz.q, "pod")          # int8 on the wire
-        s_all = jax.lax.all_gather(qz.scale, "pod")
-        dv_sum = jnp.sum(q_all.astype(jnp.float32)
-                         * s_all.reshape((-1,) + (1,) * dv.ndim), axis=0)
-    else:
-        dv_sum = jax.lax.psum(dv, "pod")
-    return v_in + dv_sum
+def _collectives(mesh, scale: GLMScale) -> engine.MeshCollectives:
+    ex_axes, sync_axes, has_pod, _ = _axes(mesh, scale)
+    sizes = {a: mesh.shape.get(a, 1) for a in ("pod", "data", "model")}
+    return engine.MeshCollectives(
+        lane_axes=tuple(a for a in ex_axes if a != "pod"),
+        sync_axes=sync_axes, axis_sizes=sizes,
+        pod_axis="pod" if has_pod else None, redeal_axis="data",
+        deterministic=scale.deterministic,
+        compress_pod=scale.compress_pod)
 
 
 def make_dense_epoch(scale: GLMScale, mesh, obj: Objective = LOGISTIC):
     """-> jit-ready epoch fn over global arrays (X, y, alpha, v, epoch)."""
-    ex_axes, sync_axes, has_pod, tp = _axes(mesh, scale)
+    ex_axes, _, _, tp = _axes(mesh, scale)
     W = _worker_count(mesh, scale)
-    n_local = scale.n // W
-    B = scale.bucket
-    nb_local = n_local // B
-    per_chunk = nb_local // scale.chunks
-    lam_n = scale.lam * scale.n
-    sig = float(W)
-    data_size = mesh.shape.get("data", 1)
-    mesh_ax_size = {a: mesh.shape.get(a, 1) for a in ("data", "model")}
+    spec = scale.engine_config(mesh)
+    coll = _collectives(mesh, scale)
     model_axis = "model" if tp else None
 
     def epoch_fn(X, y, a, v, epoch):
         # X: (d_loc, n_local) f32; y/a: (n_local,); v: (d_loc,)
-        me = sum(jax.lax.axis_index(ax) * 10_007 ** i
-                 for i, ax in enumerate(ex_axes))
-        key = jax.random.fold_in(
-            jax.random.fold_in(jax.random.PRNGKey(0), epoch), me)
-        # 1. dynamic partitioning: balanced all-to-all bucket re-deal
-        #    across the pod's lanes (data never leaves the pod)
-        X, y, a = _redeal(((X, 1), (y, 0), (a, 0)), "data", data_size,
-                          nb_local, key, frac=scale.redeal_frac)
-        # 2. per-chip random visit order over the received buckets
-        perm = jax.random.permutation(jax.random.fold_in(key, 1),
-                                      nb_local).astype(jnp.int32)
-        v_in = v
-
-        def chunk(c, carry):
-            a_loc, v_loc = carry
-            ids = jax.lax.dynamic_slice_in_dim(
-                perm, c * per_chunk, per_chunk)
-            cols = (ids[:, None] * B
-                    + jnp.arange(B, dtype=jnp.int32)).reshape(-1)
-            a_new, dv = sdca.dense_local_subepoch(
-                obj, X[:, cols], y[cols], a_loc[cols], v_loc,
-                jnp.asarray(lam_n, X.dtype), jnp.asarray(sig, X.dtype),
-                B, model_axis=model_axis)
-            for ax in sync_axes:
-                if scale.compress_sync:
-                    dv = _q_psum(dv, ax, mesh_ax_size[ax])
-                else:
-                    dv = jax.lax.psum(dv, ax)
-            return a_loc.at[cols].set(a_new), v_loc + dv
-
-        a, v = jax.lax.fori_loop(0, scale.chunks, chunk, (a, v))
-        # 3. hierarchical: per-pod replicas reduced once per epoch
-        v = _pod_reduce(v, v_in, has_pod, scale.compress_pod)
-        return X, y, a, v
+        blk, y, a, v = engine.sharded_epoch(
+            obj, spec, coll, engine.DenseBlock(X), y, a, v, epoch,
+            lam=scale.lam, n_total=scale.n, workers=W,
+            model_axis=model_axis)
+        return blk.X, y, a, v
 
     x_spec = P("model" if tp else None, ex_axes)
     e_spec = P(ex_axes)
@@ -252,49 +173,17 @@ def make_dense_epoch(scale: GLMScale, mesh, obj: Objective = LOGISTIC):
 
 
 def make_sparse_epoch(scale: GLMScale, mesh, obj: Objective = LOGISTIC):
-    ex_axes, sync_axes, has_pod, _ = _axes(mesh, scale)
+    ex_axes, _, _, _ = _axes(mesh, scale)
     W = _worker_count(mesh, scale)
-    n_local = scale.n // W
-    B = scale.bucket
-    nb_local = n_local // B
-    per_chunk = nb_local // scale.chunks
-    lam_n = scale.lam * scale.n
-    sig = float(W)
-    data_size = mesh.shape.get("data", 1)
-    mesh_ax_size = {a: mesh.shape.get(a, 1) for a in ("data", "model")}
+    spec = scale.engine_config(mesh)
+    coll = _collectives(mesh, scale)
 
     def epoch_fn(idx, val, y, a, v, epoch):
         # idx/val: (n_local, nnz); v: (d,) replicated (gather/scatter)
-        me = sum(jax.lax.axis_index(ax) * 10_007 ** i
-                 for i, ax in enumerate(ex_axes))
-        key = jax.random.fold_in(
-            jax.random.fold_in(jax.random.PRNGKey(0), epoch), me)
-        idx, val, y, a = _redeal(
-            ((idx, 0), (val, 0), (y, 0), (a, 0)), "data", data_size,
-            nb_local, key, frac=scale.redeal_frac)
-        perm = jax.random.permutation(jax.random.fold_in(key, 1),
-                                      nb_local).astype(jnp.int32)
-        v_in = v
-
-        def chunk(c, carry):
-            a_loc, v_loc = carry
-            ids = jax.lax.dynamic_slice_in_dim(
-                perm, c * per_chunk, per_chunk)
-            rows = (ids[:, None] * B
-                    + jnp.arange(B, dtype=jnp.int32)).reshape(-1)
-            a_new, dv = sdca.sparse_local_subepoch(
-                obj, idx[rows], val[rows], y[rows], a_loc[rows], v_loc,
-                jnp.asarray(lam_n, val.dtype), jnp.asarray(sig, val.dtype))
-            for ax in sync_axes:
-                if scale.compress_sync:
-                    dv = _q_psum(dv, ax, mesh_ax_size[ax])
-                else:
-                    dv = jax.lax.psum(dv, ax)
-            return a_loc.at[rows].set(a_new), v_loc + dv
-
-        a, v = jax.lax.fori_loop(0, scale.chunks, chunk, (a, v))
-        v = _pod_reduce(v, v_in, has_pod, scale.compress_pod)
-        return idx, val, y, a, v
+        blk, y, a, v = engine.sharded_epoch(
+            obj, spec, coll, engine.SparseBlock(idx, val), y, a, v,
+            epoch, lam=scale.lam, n_total=scale.n, workers=W)
+        return blk.idx, blk.val, y, a, v
 
     r_spec = P(ex_axes, None)
     e_spec = P(ex_axes)
@@ -369,7 +258,6 @@ def glm_analytic(scale: GLMScale, mesh) -> dict:
         flops = n_local * per_coord
         x_bytes = n_local * scale.nnz * 8
         bytes_acc = x_bytes * 3 + n_local * scale.nnz * 4 * 2  # v gather/scatter
-
     # collectives (result-shape convention, per device):
     #   chunk reductions of dv over sync axes (f32 all-reduce: 4 B/elem;
     #   int8 two-phase: ~2 B/elem) + the bucket re-deal (all-to-all of

@@ -19,10 +19,26 @@ import math
 
 import jax
 import numpy as np
+from jax.sharding import AbstractMesh
 
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per v5e chip
 HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link (~ICI); pod-to-pod is slower
+
+
+def abstract_mesh(shape, axis_names) -> AbstractMesh:
+    """Version-compatible AbstractMesh constructor.
+
+    Newer jax takes `AbstractMesh(shape, axis_names)`; jax <= 0.4.x
+    takes a single `shape_tuple` of (name, size) pairs.  Tests and
+    spec-checking code should use this instead of the raw class so the
+    production 256/512-chip shardings can be validated without device
+    allocation on any supported jax.
+    """
+    try:
+        return AbstractMesh(tuple(shape), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, shape)))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -1,6 +1,8 @@
 """int8 error-feedback compression for cross-pod reductions."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")  # optional test dep
 from hypothesis import given, settings, strategies as st
 
 from repro.optim.compression import Quantized, compress, dequantize

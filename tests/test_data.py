@@ -1,6 +1,7 @@
 """Data pipeline: determinism, hierarchy, learnable token stream."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional test dep
 from hypothesis import given, settings, strategies as st
 
 from repro.data import (criteo_like, epsilon_like, higgs_like,

@@ -4,11 +4,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.launch.hlo_analysis import (Roofline, collective_bytes,
                                        _shape_bytes)
 from repro.launch import glm as glm_launch
+from repro.launch.mesh import abstract_mesh
 
 
 def test_shape_bytes_parsing():
@@ -46,7 +47,7 @@ def test_roofline_terms_and_bottleneck():
 
 
 def test_glm_analytic_reflects_knobs():
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    mesh = abstract_mesh((16, 16), ("data", "model"))
     base = glm_launch.GLM_CONFIGS["glm-criteo"]
     opt = glm_launch.GLM_CONFIGS["glm-criteo-opt"]
     a_base = glm_launch.glm_analytic(base, mesh)
@@ -56,7 +57,7 @@ def test_glm_analytic_reflects_knobs():
 
 
 def test_glm_worker_counts():
-    mesh3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    mesh3 = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     # sparse / narrow-dense use every chip; feature-sharded uses pod*data
     assert glm_launch._worker_count(
         mesh3, glm_launch.GLM_CONFIGS["glm-criteo"]) == 512

@@ -133,6 +133,46 @@ def test_straggler_mask_still_converges(dense_data):
     assert gap < 1e-2, gap
 
 
+def test_straggler_masked_worker_alpha_slice_unchanged(dense_data):
+    """The examples a masked-out worker was dealt keep their alpha
+    exactly (its local updates are dropped), while every live worker's
+    slice moves — the over-decomposition contract (partition.py)."""
+    import jax.numpy as jnp
+    from repro.core import cocoa
+    from repro.core.bucketing import make_plan
+    from repro.core.partition import PartitionPlan
+    from repro.core.objectives import LOGISTIC
+
+    X, y = dense_data
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    d, n = X.shape
+    P_, K = 1, 8
+    cfg = SolverConfig(pods=P_, lanes=K, bucket=8, partition="dynamic")
+    bplan = make_plan(n, d, force=8)
+    plan = PartitionPlan(n_buckets=bplan.n_buckets, pods=P_, lanes=K,
+                         mode="dynamic")
+    alpha0, v0 = jnp.zeros(n), jnp.zeros(d)
+    dead = 3
+    mask = np.ones((P_, K), bool)
+    mask[0, dead] = False
+    alpha, v = cocoa.epoch_sim(LOGISTIC, X, y, alpha0, v0, LAM, plan,
+                               bplan, cfg, jnp.int32(0),
+                               straggler_mask=jnp.asarray(mask))
+    sched = plan.schedule(jnp.int32(0))          # (P, K, per_lane)
+    ex = (np.asarray(sched)[..., None] * 8
+          + np.arange(8)).reshape(P_, K, -1)
+    a = np.asarray(alpha)
+    # dead worker's slice untouched (alpha started at zero)
+    np.testing.assert_array_equal(a[ex[0, dead]],
+                                  np.asarray(alpha0)[ex[0, dead]])
+    # every live worker's slice changed
+    for k in range(K):
+        if k != dead:
+            assert np.abs(a[ex[0, k]]).max() > 0, k
+    # and v still moved (the epoch is valid, not a no-op)
+    assert float(jnp.max(jnp.abs(v))) > 0
+
+
 def test_kernel_path_matches_jnp_path(dense_data):
     """cfg.use_kernel routes through the Pallas kernel (interpret on CPU)
     and must give the same epoch results."""

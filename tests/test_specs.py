@@ -7,15 +7,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, list_archs
 from repro.launch import steps as steps_lib
+from repro.launch.mesh import abstract_mesh
 from repro.launch.specs import SHAPES, applicable, cache_pspec, input_specs
 from repro.models.layers import ParamSpec
 
-POD = AbstractMesh((16, 16), ("data", "model"))
-MULTIPOD = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+POD = abstract_mesh((16, 16), ("data", "model"))
+MULTIPOD = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _check_divisible(sds, mesh):
