@@ -10,34 +10,29 @@ from __future__ import annotations
 import time
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import EngineConfig, GLMTrainer
-from repro.data import (criteo_like, epsilon_like, higgs_like,
-                        make_dense_classification,
-                        make_sparse_classification)
+from repro.data import registry
 
-# reduced-scale stand-ins (paper: criteo 45M x 1M, higgs 11M x 28,
-# epsilon 400k x 2k).  scale = fraction of the original n.
+# reduced-scale materializations of registry datasets (paper: criteo
+# 45M x 1M, higgs 11M x 28, epsilon 400k x 2k).  The registry records
+# the real shapes; `scale` (fraction of the original n) is derived.
 DATASETS = {
-    "criteo": dict(maker=lambda: criteo_like(n=8192, d=4096),
-                   sparse=True, scale=8192 / 45e6),
-    "higgs": dict(maker=lambda: higgs_like(n=16384),
-                  sparse=False, scale=16384 / 11e6),
-    "epsilon": dict(maker=lambda: epsilon_like(n=4096),
-                    sparse=False, scale=4096 / 400e3),
+    "criteo": dict(registry="criteo-kaggle-sub", n=8192, d=4096),
+    "higgs": dict(registry="higgs", n=16384),
+    "epsilon": dict(registry="epsilon", n=4096),
 }
 
 
 def load(name):
-    d = DATASETS[name]
-    out = d["maker"]()
-    if d["sparse"]:
-        (idx, val), y, dim = out
-        return dict(X=(idx, val), y=y, d=dim, sparse=True,
-                    scale=d["scale"])
-    X, y = out
-    return dict(X=X, y=y, d=X.shape[0], sparse=False, scale=d["scale"])
+    """Benchmark alias or any registry dataset name -> arrays dict."""
+    opts = DATASETS.get(name, dict(registry=name))
+    ds = registry.get_dataset(opts["registry"], n=opts.get("n"),
+                              d=opts.get("d"))
+    if ds.sparse:
+        return dict(X=(ds.idx, ds.val), y=ds.y, d=ds.d, sparse=True,
+                    scale=ds.scale)
+    return dict(X=ds.X, y=ds.y, d=ds.d, sparse=False, scale=ds.scale)
 
 
 def fit_timed(data, cfg: EngineConfig, *, lam=1e-3, max_epochs=80,

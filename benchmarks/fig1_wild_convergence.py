@@ -6,7 +6,6 @@ fails to converge as lanes grow, worse with more numa nodes (pods);
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import EngineConfig
 from repro.data import (make_dense_classification,

@@ -4,7 +4,7 @@ pod scheme."""
 from __future__ import annotations
 
 from repro.core import EngineConfig
-from .common import DATASETS, emit, fit_timed, load
+from .common import emit, fit_timed, load
 
 HEADER = ["bench", "dataset", "variant", "epochs", "converged", "wall_s",
           "gap"]

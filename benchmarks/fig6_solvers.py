@@ -9,13 +9,11 @@ from __future__ import annotations
 import time
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import GLMTrainer, SolverConfig
 from repro.core.objectives import LOGISTIC
-from repro.data import make_dense_classification
 from repro.optim.lbfgs import glm_objective, gradient_descent, lbfgs
-from .common import DATASETS, emit, load
+from .common import emit, load
 
 HEADER = ["bench", "dataset", "solver", "wall_s", "primal", "test_loss",
           "speedup_vs_lbfgs"]

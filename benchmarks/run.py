@@ -1,13 +1,19 @@
 """Run every paper-figure benchmark at reduced scale + the roofline table.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--json BENCH_2.json]
 
-Each module prints its own CSV block; a summary line closes the run.
+Each module prints its own CSV block; a machine-readable summary
+(per-figure runtime, row count, final duality gap) is written as JSON
+for CI artifacts / perf-trajectory tracking, and the process exits
+non-zero when any figure module raises so a failing benchmark fails CI.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 import time
+import traceback
 
 from . import (fig1_wild_convergence, fig2_scaling_partitions,
                fig3_convergence, fig4_strong_scaling, fig5_ablations,
@@ -24,25 +30,57 @@ BENCHES = [
 ]
 
 
-def main() -> None:
+def _final_gap(rows) -> float | None:
+    gaps = [r["gap"] for r in rows
+            if isinstance(r.get("gap"), float)]
+    return gaps[-1] if gaps else None
+
+
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-shaped sizes (slower)")
     ap.add_argument("--only", default=None)
-    args = ap.parse_args()
+    ap.add_argument("--json", default="BENCH_2.json",
+                    help="summary output path ('' disables)")
+    args = ap.parse_args(argv)
 
     total = 0
+    figures: dict[str, dict] = {}
+    failed: list[str] = []
     for name, mod in BENCHES:
         if args.only and args.only not in name:
             continue
         print(f"\n===== {name} =====")
         t0 = time.perf_counter()
-        rows = mod.run(quick=not args.full)
+        try:
+            rows = mod.run(quick=not args.full)
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+            figures[name] = {"failed": True,
+                             "runtime_s": time.perf_counter() - t0}
+            print(f"----- {name}: FAILED")
+            continue
         dt = time.perf_counter() - t0
         total += len(rows)
+        figures[name] = {"failed": False, "runtime_s": dt,
+                         "rows": len(rows), "final_gap": _final_gap(rows)}
         print(f"----- {name}: {len(rows)} rows in {dt:.1f}s")
-    print(f"\nbenchmarks complete: {total} rows")
+
+    print(f"\nbenchmarks complete: {total} rows"
+          + (f", {len(failed)} FAILED: {failed}" if failed else ""))
+    if args.json:
+        summary = {"schema": "bench-summary/v1",
+                   "quick": not args.full,
+                   "figures": figures, "total_rows": total,
+                   "failed": failed}
+        with open(args.json, "w") as f:
+            json.dump(summary, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"summary JSON: {args.json}")
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

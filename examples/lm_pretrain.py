@@ -9,7 +9,6 @@ deterministic restartable data, checkpoint/resume — the same train()
 the production launcher uses on the 512-chip mesh.
 """
 import argparse
-import dataclasses
 
 import numpy as np
 

@@ -6,7 +6,6 @@ Walks the public API end to end: synthetic data -> SolverConfig (the
 paper's knobs) -> GLMTrainer -> duality-gap-certified solution, and
 shows the wild-vs-domesticated contrast the paper is about.
 """
-import time
 
 from repro.core import GLMTrainer, SolverConfig
 from repro.data import make_dense_classification

@@ -13,7 +13,7 @@ CONFIG = ArchConfig(
     n_layers=32, d_model=3072, n_heads=32, n_kv_heads=32, d_ff=8192,
     vocab=32064,
     frontend="vision", n_patches=576,
-    
+
 )
 
 

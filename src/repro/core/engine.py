@@ -46,10 +46,12 @@ with `lane` counted data-major over the example-parallel axes.
 from __future__ import annotations
 
 import dataclasses
+from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Mapping, Optional, Protocol, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import sdca
 from .config import AlgoConfig, EngineConfig, as_engine_config
@@ -340,10 +342,10 @@ class SimCollectives:
         """(P, K, d) worker deltas -> (P, d) per-pod ordered sums."""
         if compress:
             dv = _quantize_roundtrip(dv, axis=dv.ndim - 1)
-        # per-pod (K, d) sum over axis 0: the same reduction the mesh
-        # backend performs on its all_gather'd stack (bit-stable).
-        return jnp.stack([jnp.sum(dv[p], axis=0)
-                          for p in range(self.pods)])
+        # per-pod sum over the lane axis: the same ordered reduction
+        # the mesh backend performs on its all_gather'd stack
+        # (bit-stable; pinned by the sim<->mesh equivalence tests).
+        return jnp.sum(dv, axis=1)
 
     def pod_reduce(self, v_pods, v_in):
         if self.pods == 1:
@@ -468,6 +470,23 @@ class MeshCollectives:
 # ---------------------------------------------------------------------------
 
 
+def _apply_chunk(coll: Collectives, solver: LocalSolver, algo: AlgoConfig,
+                 data, yc: Array, ac: Array, v_c: Array, *,
+                 straggler_mask: Optional[Array] = None,
+                 dv_scale: float = 1.0) -> tuple[Array, Array]:
+    """One chunk's solve/mask/sync — shared by the resident-block loop
+    (`run_epoch`) and the out-of-core loop (`run_epoch_streamed`), so
+    the two paths are the same program on the same inputs."""
+    a_new, dv = coll.map_workers(solver,
+                                 (data, yc, ac, coll.worker_view(v_c)))
+    if straggler_mask is not None:
+        a_new = jnp.where(straggler_mask[..., None], a_new, ac)
+        dv = dv * straggler_mask[..., None].astype(dv.dtype)
+    if dv_scale != 1.0:
+        dv = dv * jnp.asarray(dv_scale, dv.dtype)
+    return a_new, v_c + coll.lane_sum(dv, compress=algo.compress_sync)
+
+
 def _put_cols(a: Array, cols: Array, vals: Array) -> Array:
     """alpha[..., cols] = vals with optional leading worker axes."""
     if a.ndim == 1:
@@ -538,14 +557,9 @@ def run_epoch(
         data = block.take(cols)
         yc = jnp.take_along_axis(y, cols, -1)
         ac = jnp.take_along_axis(a_c, cols, -1)
-        a_new, dv = coll.map_workers(solver,
-                                     (data, yc, ac, coll.worker_view(v_c)))
-        if straggler_mask is not None:
-            a_new = jnp.where(straggler_mask[..., None], a_new, ac)
-            dv = dv * straggler_mask[..., None].astype(dv.dtype)
-        if dv_scale != 1.0:
-            dv = dv * jnp.asarray(dv_scale, dv.dtype)
-        v_c = v_c + coll.lane_sum(dv, compress=algo.compress_sync)
+        a_new, v_c = _apply_chunk(
+            coll, solver, algo, data, yc, ac, v_c,
+            straggler_mask=straggler_mask, dv_scale=dv_scale)
         return _put_cols(a_c, cols, a_new), v_c
 
     # The chunk loop is unrolled (chunks is a small static count, <= ~8).
@@ -690,6 +704,132 @@ def sim_epoch_sparse(
         alpha[ex], v, epoch, straggler_mask=straggler_mask, redeal=False,
         visit_shuffle=False, dv_scale=dv_scale)
     return alpha.at[ex].set(a_new), v_new
+
+
+# ---------------------------------------------------------------------------
+# Out-of-core streaming: ChunkFeed + the streamed chunk loop (DESIGN.md S9)
+# ---------------------------------------------------------------------------
+
+
+class ChunkFeed(Protocol):
+    """Host-side supplier of worker-shaped example chunks.
+
+    The engine asks for GLOBAL bucket ids laid out (*wshape, nb_chunk)
+    and gets back device-resident (data, y) covering those buckets'
+    examples in schedule order:
+
+        dense:   data (*wshape, d, nb_chunk*B)
+        sparse:  data = (idx, val), each (*wshape, nb_chunk*B, nnz)
+        labels:  y (*wshape, nb_chunk*B)
+
+    `fetch` is called one chunk ahead from a worker thread (double
+    buffering), so implementations must tolerate concurrent reads.
+    Implementations live in `repro.data.cache` (`TileFeed` over the
+    mmap'd bucket-tile cache, `ArrayFeed` over resident arrays).
+    """
+    n: int          # global example count (padded)
+    d: int
+    bucket: int
+    sparse: bool
+
+    def fetch(self, bids: np.ndarray): ...
+
+
+def make_streamed_step(coll: Collectives, solver: LocalSolver,
+                       algo: AlgoConfig, *, dv_scale: float = 1.0,
+                       jit: bool = True):
+    """One streamed chunk: gather alpha rows, run `_apply_chunk` (the
+    SAME body as `run_epoch`'s resident loop), scatter alpha back.
+
+    Built once per trainer so the jitted step compiles once.  alpha is
+    deliberately NOT donated: a mid-epoch failure (feed I/O error,
+    interrupt) must leave the caller's pre-epoch alpha buffer alive so
+    training state stays recoverable — donation would delete it on
+    accelerator backends.
+    """
+
+    def step(data, yc, cols, a, v_c):
+        ac = a[cols]
+        a_new, v_c = _apply_chunk(coll, solver, algo, data, yc, ac, v_c,
+                                  dv_scale=dv_scale)
+        return a.at[cols].set(a_new), v_c
+
+    return jax.jit(step) if jit else step
+
+
+def run_epoch_streamed(
+    coll: Collectives,
+    feed: ChunkFeed,
+    step,                      # from make_streamed_step
+    plan,                      # PartitionPlan (host-evaluated schedule)
+    algo: AlgoConfig,
+    alpha: Array,              # (n,) global dual, device-resident
+    v: Array,                  # (d,) shared vector, device-resident
+    epoch: int,
+) -> tuple[Array, Array]:
+    """One epoch where `run_epoch`'s chunked sub-epoch loop consumes
+    host-resident chunks instead of a device-resident block.
+
+    The schedule is the same pure function of (seed, epoch) the
+    in-memory simulator uses (`plan.schedule`), evaluated on host; the
+    per-chunk compute is `_apply_chunk` — so with
+    `deterministic=True` this path is bitwise-identical to
+    `sim_epoch_dense`/`sim_epoch_sparse` on the same data (pinned by
+    tests/test_pipeline.py) while only ever holding `chunks`-th of X on
+    device.  Chunk c+1's host gather + H2D overlaps chunk c's compute
+    (double buffering via a one-slot prefetch thread).
+    """
+    B = feed.bucket
+    per_lane = plan.per_lane
+    if per_lane % algo.chunks:
+        raise ValueError(f"chunks={algo.chunks} must divide per-lane "
+                         f"bucket count {per_lane}")
+    per_chunk = per_lane // algo.chunks
+    sched = np.asarray(plan.schedule(int(epoch)))   # (P, K, per_lane)
+
+    def fetch(c):
+        bids = sched[..., c * per_chunk:(c + 1) * per_chunk]
+        cols = (bids[..., None] * B
+                + np.arange(B, dtype=np.int32)).reshape(
+                    bids.shape[:-1] + (per_chunk * B,))
+        data, yc = feed.fetch(bids)
+        return jnp.asarray(cols), data, yc
+
+    v = coll.pod_replicate(v)
+    v_in = v
+    with ThreadPoolExecutor(max_workers=1) as ex:
+        nxt = ex.submit(fetch, 0)
+        for c in range(algo.chunks):
+            cols, data, yc = nxt.result()
+            if c + 1 < algo.chunks:
+                nxt = ex.submit(fetch, c + 1)
+            alpha, v = step(data, yc, cols, alpha, v)
+    return alpha, coll.pod_reduce(v, v_in)
+
+
+def make_streamed_epoch(obj: Objective, spec, plan, feed: ChunkFeed, *,
+                        lam: float, jit_step: bool = True):
+    """-> epoch_fn(alpha, v, epoch) for out-of-core training.
+
+    The streamed twin of the jitted `sim_epoch_dense`/`sim_epoch_sparse`
+    closure `GLMTrainer` builds: same solver, same sigma', same
+    schedule, but examples arrive chunk-by-chunk through `feed`.
+    """
+    spec = as_engine_config(spec)
+    coll = _sim_coll(spec)
+    W = plan.pods * plan.lanes
+    solver = make_local_solver(
+        spec.algo.local_solver, obj, lam * feed.n, spec.sigma_prime(W),
+        bucket=feed.bucket, sparse=feed.sparse)
+    dv_scale = (1.0 / W if spec.algo.aggregation == "averaging" else 1.0)
+    step = make_streamed_step(coll, solver, spec.algo,
+                              dv_scale=dv_scale, jit=jit_step)
+
+    def epoch_fn(alpha, v, epoch):
+        return run_epoch_streamed(coll, feed, step, plan, spec.algo,
+                                  alpha, v, epoch)
+
+    return epoch_fn
 
 
 # ---------------------------------------------------------------------------

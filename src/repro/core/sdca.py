@@ -23,8 +23,7 @@ simulator (which is what makes it diverge on dense data, as in Fig 1a).
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

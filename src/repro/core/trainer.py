@@ -1,9 +1,24 @@
-"""GLMTrainer: epochs, convergence detection, metrics, checkpoint/restart.
+"""GLM training drivers: epochs, convergence detection, metrics,
+checkpoint/restart — for in-memory arrays AND out-of-core caches.
 
 Convergence is declared the way the paper does it: when the relative
 change of the learned model between consecutive epochs drops below a
 threshold.  The duality gap (a certificate, not available to the paper's
 stopping rule) is also tracked for tests and benchmarks.
+
+Two drivers share one fit loop (`_TrainerBase`):
+
+  * `GLMTrainer`     — device-resident arrays, whole-epoch jit (the
+                       simulator path every benchmark uses);
+  * `StreamedGLMTrainer` — examples live in a `repro.data.cache`
+                       bucket-tile cache and stream through the
+                       engine's `ChunkFeed` loop, so n can exceed
+                       device memory.  With `deterministic=True` the
+                       two are bitwise-identical on the same data
+                       (pinned by tests/test_pipeline.py).
+
+`fit_dataset` is the one-call entry point: registry name -> cache ->
+trainer -> `FitResult`.
 """
 from __future__ import annotations
 
@@ -40,79 +55,19 @@ class FitResult:
         return self.history[-1]["gap"] if self.history else float("nan")
 
 
-class GLMTrainer:
-    """Paper's solver: bucketed, dynamically partitioned, hierarchical SDCA.
+class _TrainerBase:
+    """The shared fit loop.  Subclasses provide `_epoch_fn(alpha, v,
+    epoch)`, `gap()`, and the `alpha`/`v`/`epoch` state fields."""
 
-    dense:  X (d, n);  sparse: (idx, val) padded CSR, plus d.
-    """
+    obj: Objective
+    lam: float
+    alpha: Array
+    v: Array
+    epoch: int
 
-    def __init__(self, X, y, *, objective: str | Objective = "logistic",
-                 lam: float = 1e-3,
-                 cfg: SolverConfig | EngineConfig = SolverConfig(),
-                 sparse: bool = False, d: Optional[int] = None,
-                 bucket_force: Optional[int] = None):
-        self.obj = (objective if isinstance(objective, Objective)
-                    else get_objective(objective))
-        self.lam = float(lam)
-        self.cfg = cfg
-        self.spec = as_engine_config(cfg)
-        self.sparse = sparse
-        if sparse:
-            idx, val = X
-            self.idx = jnp.asarray(idx, jnp.int32)
-            self.val = jnp.asarray(val, jnp.float32)
-            self.n = self.val.shape[0]
-            self.d = int(d)
-        else:
-            self.X = jnp.asarray(X)
-            self.d, self.n = self.X.shape
-        self.y = jnp.asarray(y)
-
-        algo, dep = self.spec.algo, self.spec.deployment
-        force = bucket_force if bucket_force is not None else algo.bucket
-        self.bplan = make_plan(self.n, self.d, force=force or 1)
-        self.plan = PartitionPlan(
-            n_buckets=self.bplan.n_buckets, pods=dep.pods, lanes=dep.lanes,
-            mode=algo.partition, seed=algo.seed,
-            redeal_frac=algo.redeal_frac)
-
-        self.alpha = jnp.zeros(self.n, jnp.float32)
-        self.v = jnp.zeros(self.d, jnp.float32)
-        self.epoch = 0
-
-        if sparse:
-            self._epoch_fn = jax.jit(
-                lambda a, v, e: engine.sim_epoch_sparse(
-                    self.obj, self.idx, self.val, self.y, a, v, self.lam,
-                    self.plan, self.bplan, self.spec, e))
-        else:
-            self._epoch_fn = jax.jit(
-                lambda a, v, e: engine.sim_epoch_dense(
-                    self.obj, self.X, self.y, a, v, self.lam,
-                    self.plan, self.bplan, self.spec, e))
-
-    # -- diagnostics ------------------------------------------------------
     def gap(self) -> float:
-        if self.sparse:
-            m = jnp.sum(self.v[self.idx] * self.val, axis=1)
-            n = self.n
-            p = (jnp.sum(self.obj.loss(m, self.y)) / n
-                 + 0.5 * self.lam * jnp.sum(self.v ** 2))
-            dval = objectives.dual_value(self.obj, self.alpha, self.v,
-                                         self.y, self.lam)
-            return float(p - dval)
-        return float(objectives.duality_gap(
-            self.obj, self.alpha, self.v, self.X, self.y, self.lam))
+        raise NotImplementedError
 
-    def primal(self) -> float:
-        if self.sparse:
-            m = jnp.sum(self.v[self.idx] * self.val, axis=1)
-            return float(jnp.sum(self.obj.loss(m, self.y)) / self.n
-                         + 0.5 * self.lam * jnp.sum(self.v ** 2))
-        return float(objectives.primal_value(
-            self.obj, self.v, self.X, self.y, self.lam))
-
-    # -- training ---------------------------------------------------------
     def fit(self, max_epochs: int = 100, tol: float = 1e-3,
             gap_every: int = 0, verbose: bool = False,
             diverge_above: float = 1e8) -> FitResult:
@@ -157,3 +112,225 @@ class GLMTrainer:
         self.alpha = jnp.asarray(st["alpha"])
         self.v = jnp.asarray(st["v"])
         self.epoch = int(st["epoch"])
+
+
+class GLMTrainer(_TrainerBase):
+    """Paper's solver: bucketed, dynamically partitioned, hierarchical SDCA.
+
+    dense:  X (d, n);  sparse: (idx, val) padded CSR, plus d.
+    """
+
+    def __init__(self, X, y, *, objective: str | Objective = "logistic",
+                 lam: float = 1e-3,
+                 cfg: SolverConfig | EngineConfig = SolverConfig(),
+                 sparse: bool = False, d: Optional[int] = None,
+                 bucket_force: Optional[int] = None):
+        self.obj = (objective if isinstance(objective, Objective)
+                    else get_objective(objective))
+        self.lam = float(lam)
+        self.cfg = cfg
+        self.spec = as_engine_config(cfg)
+        self.sparse = sparse
+        if sparse:
+            idx, val = X
+            self.idx = jnp.asarray(idx, jnp.int32)
+            self.val = jnp.asarray(val, jnp.float32)
+            self.n = self.val.shape[0]
+            self.d = int(d)
+        else:
+            self.X = jnp.asarray(X)
+            self.d, self.n = self.X.shape
+        self.y = jnp.asarray(y)
+
+        algo, dep = self.spec.algo, self.spec.deployment
+        force = bucket_force if bucket_force is not None else algo.bucket
+        self.bplan = make_plan(self.n, self.d, force=force or 1)
+        if self.bplan.bucket != algo.bucket:
+            # run_epoch chunks columns by algo.bucket while the gather/
+            # solver use the plan's bucket — keep the single source of
+            # truth (bucket_force / the plan heuristic) authoritative.
+            algo = dataclasses.replace(algo, bucket=self.bplan.bucket)
+            self.spec = dataclasses.replace(self.spec, algo=algo)
+        self.plan = PartitionPlan(
+            n_buckets=self.bplan.n_buckets, pods=dep.pods, lanes=dep.lanes,
+            mode=algo.partition, seed=algo.seed,
+            redeal_frac=algo.redeal_frac)
+
+        self.alpha = jnp.zeros(self.n, jnp.float32)
+        self.v = jnp.zeros(self.d, jnp.float32)
+        self.epoch = 0
+
+        if sparse:
+            self._epoch_fn = jax.jit(
+                lambda a, v, e: engine.sim_epoch_sparse(
+                    self.obj, self.idx, self.val, self.y, a, v, self.lam,
+                    self.plan, self.bplan, self.spec, e))
+        else:
+            self._epoch_fn = jax.jit(
+                lambda a, v, e: engine.sim_epoch_dense(
+                    self.obj, self.X, self.y, a, v, self.lam,
+                    self.plan, self.bplan, self.spec, e))
+
+    # -- diagnostics ------------------------------------------------------
+    def gap(self) -> float:
+        if self.sparse:
+            m = jnp.sum(self.v[self.idx] * self.val, axis=1)
+            n = self.n
+            p = (jnp.sum(self.obj.loss(m, self.y)) / n
+                 + 0.5 * self.lam * jnp.sum(self.v ** 2))
+            dval = objectives.dual_value(self.obj, self.alpha, self.v,
+                                         self.y, self.lam)
+            return float(p - dval)
+        return float(objectives.duality_gap(
+            self.obj, self.alpha, self.v, self.X, self.y, self.lam))
+
+    def primal(self) -> float:
+        if self.sparse:
+            m = jnp.sum(self.v[self.idx] * self.val, axis=1)
+            return float(jnp.sum(self.obj.loss(m, self.y)) / self.n
+                         + 0.5 * self.lam * jnp.sum(self.v ** 2))
+        return float(objectives.primal_value(
+            self.obj, self.v, self.X, self.y, self.lam))
+
+
+class StreamedGLMTrainer(_TrainerBase):
+    """Out-of-core twin of `GLMTrainer` over a bucket-tile cache.
+
+    Only alpha (n,) and v (d,) live on device between chunks; X/y
+    stream through the cache's `TileFeed` one chunk at a time with
+    double-buffered host->device transfer, so datasets larger than
+    device memory train at full algorithmic fidelity (same schedule,
+    same solver, same sigma').
+    """
+
+    def __init__(self, cache, *, objective: str | Objective | None = None,
+                 lam: float = 1e-3,
+                 cfg: SolverConfig | EngineConfig = SolverConfig(),
+                 jit_step: bool = True):
+        meta = cache.meta
+        objective = objective or meta.objective
+        self.obj = (objective if isinstance(objective, Objective)
+                    else get_objective(objective))
+        self.lam = float(lam)
+        self.cfg = cfg
+        self.spec = as_engine_config(cfg)
+        self.cache = cache
+        self.sparse = meta.kind == "sparse"
+        self.n, self.d = meta.n, meta.d
+
+        algo, dep = self.spec.algo, self.spec.deployment
+        if algo.bucket not in (0, 1, meta.bucket):
+            raise ValueError(
+                f"cfg bucket={algo.bucket} != cache bucket={meta.bucket}; "
+                f"rebuild the cache at the training bucket size")
+        self.bplan = BucketPlan(n=self.n, bucket=meta.bucket,
+                                n_buckets=meta.n_buckets)
+        self.plan = PartitionPlan(
+            n_buckets=meta.n_buckets, pods=dep.pods, lanes=dep.lanes,
+            mode=algo.partition, seed=algo.seed,
+            redeal_frac=algo.redeal_frac)
+        self.feed = cache.feed()
+
+        self.alpha = jnp.zeros(self.n, jnp.float32)
+        self.v = jnp.zeros(self.d, jnp.float32)
+        self.epoch = 0
+        self._epoch_fn = engine.make_streamed_epoch(
+            self.obj, self.spec, self.plan, self.feed, lam=self.lam,
+            jit_step=jit_step)
+
+    # -- diagnostics (streamed over the cache) ----------------------------
+    def _primal_dual(self, gbuckets: int = 256) -> tuple[float, float]:
+        """One streaming pass: primal loss sum + dual conjugate sum."""
+        nb = self.cache.meta.n_buckets
+        B = self.cache.meta.bucket
+        loss_sum = conj_sum = 0.0
+        alpha = np.asarray(self.alpha)
+        v = self.v
+        for start in range(0, nb, gbuckets):
+            bids = np.arange(start, min(start + gbuckets, nb))
+            data, y = self.cache.gather_buckets(bids)
+            if self.sparse:
+                idx, val = data
+                m = jnp.sum(v[jnp.asarray(idx)] * jnp.asarray(val), axis=1)
+            else:
+                m = jnp.asarray(data).T @ v
+            y = jnp.asarray(y)
+            loss_sum += float(jnp.sum(self.obj.loss(m, y)))
+            a = jnp.asarray(alpha[start * B:start * B + y.shape[0]])
+            conj_sum += float(jnp.sum(self.obj.conj_neg(a, y)))
+        reg = 0.5 * self.lam * float(jnp.sum(v ** 2))
+        primal = loss_sum / self.n + reg
+        dual = -conj_sum / self.n - reg
+        return primal, dual
+
+    def primal(self) -> float:
+        return self._primal_dual()[0]
+
+    def gap(self) -> float:
+        p, dv = self._primal_dual()
+        return p - dv
+
+
+def fit_dataset(name: str, *,
+                cfg: SolverConfig | EngineConfig | None = None,
+                objective: Optional[str] = None,
+                lam: Optional[float] = None,
+                n: Optional[int] = None, d: Optional[int] = None,
+                streamed: bool = False, cache_dir=None, data_dir=None,
+                bucket: Optional[int] = None,
+                max_epochs: int = 100, tol: float = 1e-3,
+                gap_every: int = 0, verbose: bool = False,
+                return_trainer: bool = False):
+    """Train on a registry dataset end to end: name -> (cache) -> fit.
+
+    * ``streamed=False`` loads the dataset (through the tile cache when
+      ``cache_dir`` is set, else directly) and runs `GLMTrainer`;
+    * ``streamed=True`` builds/opens the bucket-tile cache and runs
+      `StreamedGLMTrainer` out of core.
+
+    The cache is padded so every partition mode divides the chosen
+    (pods, lanes, chunks, bucket) topology; with
+    ``deterministic=True`` the two modes produce bitwise-identical
+    models on the same cache.
+    """
+    from repro.data import registry
+
+    spec = registry.get_spec(name)
+    ecfg = as_engine_config(cfg) if cfg is not None else EngineConfig()
+    algo, dep = ecfg.algo, ecfg.deployment
+    objective = objective or spec.objective
+    lam = spec.lam if lam is None else lam
+    B = bucket or max(algo.bucket, 1)
+    use_cache = streamed or cache_dir is not None
+
+    if use_cache:
+        # every partition mode divides: pods*lanes*lanes*chunks buckets
+        mult = dep.pods * dep.lanes * dep.lanes * algo.chunks * B
+        cache = registry.materialize(
+            name, cache_dir, bucket=B, pods=dep.pods, n=n, d=d,
+            pad_multiple=mult, data_dir=data_dir)
+        if streamed:
+            tr = StreamedGLMTrainer(cache, objective=objective, lam=lam,
+                                    cfg=ecfg)
+        else:
+            arrays, y = cache.load_arrays()
+            if cache.meta.kind == "sparse":
+                tr = GLMTrainer(arrays, y, objective=objective, lam=lam,
+                                cfg=ecfg, sparse=True, d=cache.meta.d,
+                                bucket_force=cache.meta.bucket)
+            else:
+                tr = GLMTrainer(arrays, y, objective=objective, lam=lam,
+                                cfg=ecfg, bucket_force=cache.meta.bucket)
+    else:
+        ds = registry.get_dataset(name, n=n, d=d, data_dir=data_dir)
+        if ds.sparse:
+            tr = GLMTrainer((ds.idx, ds.val), ds.y, objective=objective,
+                            lam=lam, cfg=ecfg, sparse=True, d=ds.d,
+                            bucket_force=B)
+        else:
+            tr = GLMTrainer(ds.X, ds.y, objective=objective, lam=lam,
+                            cfg=ecfg, bucket_force=B)
+
+    res = tr.fit(max_epochs=max_epochs, tol=tol, gap_every=gap_every,
+                 verbose=verbose)
+    return (res, tr) if return_trainer else res

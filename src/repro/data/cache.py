@@ -1,0 +1,320 @@
+"""Versioned, memory-mappable bucket-tile cache (DESIGN.md S9).
+
+Cold-start ingest (text parsing, padding, layout packing) is paid ONCE:
+`build_cache` packs a dataset into the on-disk analogue of the engine's
+VMEM tile — examples grouped into buckets of B, each bucket stored as
+one contiguous (d_pad x B) tile (dense) or (B x nnz) idx/val tile pair
+(sparse), bucket-major, pod-sharded on the leading axis:
+
+    X.bin    (pods, nb_pod, d_pad, B)  float32     [dense]
+    idx.bin  (pods, nb_pod, B, nnz)    int32       [sparse]
+    val.bin  (pods, nb_pod, B, nnz)    float32     [sparse]
+    y.bin    (pods, nb_pod, B)         float32
+    meta.json  — magic/version, shapes, true example count, crc32s
+
+Epoch start is then an mmap + gather: `TileCache.gather_buckets` fancy-
+indexes the memmap with global bucket ids, touching only the tiles a
+chunk visits, and `TileFeed` device-puts the result — the `ChunkFeed`
+the engine's streamed loop consumes.  Bucket b lives at
+``tiles[b // nb_pod, b % nb_pod]``, matching `PartitionPlan`'s static
+pod ranges, so a pod's epoch reads only its own shard of the file.
+
+Determinism: the writer is a pure function of the input arrays (fixed
+dtypes, C order, sorted-key JSON, no timestamps), so two builds of the
+same dataset are byte-identical across processes — pinned by
+tests/test_pipeline.py.
+
+Padding: n is padded up to a multiple of ``pods * bucket`` (or the
+caller's stricter ``pad_multiple``) with x=0 / y=+1 examples.  A zero
+example never moves the shared vector v (its margin and update are
+identically zero-weighted), so training is unaffected; diagnostics over
+the padded set count the pad examples' flat loss terms, which shrink
+with 1/n and are recorded via ``n_examples``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import zlib
+
+import numpy as np
+
+__all__ = [
+    "CACHE_MAGIC", "CACHE_VERSION", "CacheMeta", "TileCache",
+    "ArrayFeed", "TileFeed", "build_cache", "open_cache", "pad_examples",
+]
+
+CACHE_MAGIC = "repro-tile-cache"
+CACHE_VERSION = 1
+
+_SUBLANE = 8          # pad d to the VPU sublane multiple
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheMeta:
+    """Everything needed to mmap the arrays back + provenance."""
+    name: str
+    kind: str                  # dense | sparse
+    n: int                     # padded example count (what training sees)
+    n_examples: int            # true example count before padding
+    d: int
+    d_pad: int                 # dense tile row count (d rounded up)
+    bucket: int
+    pods: int
+    nnz: int                   # sparse only; 0 for dense
+    objective: str
+    version: int = CACHE_VERSION
+    magic: str = CACHE_MAGIC
+
+    @property
+    def n_buckets(self) -> int:
+        return self.n // self.bucket
+
+    @property
+    def nb_pod(self) -> int:
+        return self.n_buckets // self.pods
+
+    def array_specs(self) -> dict[str, tuple[tuple[int, ...], str]]:
+        """name -> (shape, dtype) of every .bin file."""
+        P, nbp, B = self.pods, self.nb_pod, self.bucket
+        if self.kind == "dense":
+            arrs = {"X": ((P, nbp, self.d_pad, B), "float32")}
+        else:
+            arrs = {"idx": ((P, nbp, B, self.nnz), "int32"),
+                    "val": ((P, nbp, B, self.nnz), "float32")}
+        arrs["y"] = ((P, nbp, B), "float32")
+        return arrs
+
+
+def pad_examples(y: np.ndarray, multiple: int, *,
+                 X: np.ndarray | None = None,
+                 idx: np.ndarray | None = None,
+                 val: np.ndarray | None = None):
+    """Pad n up to `multiple` with inert examples (x=0, y=+1)."""
+    n = y.shape[0]
+    n_pad = _ceil_to(max(n, 1), multiple)
+    if n_pad == n:
+        return y, X, idx, val
+    extra = n_pad - n
+    y = np.concatenate([y, np.ones(extra, dtype=y.dtype)])
+    if X is not None:
+        X = np.concatenate(
+            [X, np.zeros((X.shape[0], extra), dtype=X.dtype)], axis=1)
+    if idx is not None:
+        idx = np.concatenate(
+            [idx, np.zeros((extra, idx.shape[1]), dtype=idx.dtype)])
+        val = np.concatenate(
+            [val, np.zeros((extra, val.shape[1]), dtype=val.dtype)])
+    return y, X, idx, val
+
+
+def build_cache(path, name: str, *, y, X=None, idx=None, val=None,
+                d: int | None = None, kind: str | None = None,
+                bucket: int = 16, pods: int = 1,
+                pad_multiple: int | None = None,
+                objective: str = "logistic") -> "TileCache":
+    """Pack arrays into bucket tiles and write a cache directory.
+
+    Dense input: ``X (d, n)``; sparse input: ``idx/val (n, nnz)`` plus
+    ``d``.  ``pad_multiple`` defaults to ``pods * bucket`` — callers
+    that know the training topology pass the stricter
+    pods*lanes*lanes*chunks*bucket so every partition mode divides.
+    """
+    path = pathlib.Path(path)
+    if kind is None:
+        kind = "dense" if X is not None else "sparse"
+    y = np.ascontiguousarray(np.asarray(y, np.float32))
+    n_examples = y.shape[0]
+    mult = pad_multiple or (pods * bucket)
+    mult = _ceil_to(mult, pods * bucket)
+
+    if kind == "dense":
+        X = np.ascontiguousarray(np.asarray(X, np.float32))
+        d = X.shape[0]
+        y, X, _, _ = pad_examples(y, mult, X=X)
+        n = y.shape[0]
+        d_pad = _ceil_to(d, _SUBLANE)
+        nb = n // bucket
+        Xp = np.zeros((d_pad, n), dtype=np.float32)
+        Xp[:d] = X
+        # (d_pad, nb, B) -> bucket-major tiles (pods, nb_pod, d_pad, B)
+        tiles = np.transpose(Xp.reshape(d_pad, nb, bucket), (1, 0, 2))
+        arrays = {"X": np.ascontiguousarray(tiles).reshape(
+            pods, nb // pods, d_pad, bucket)}
+        nnz = 0
+    else:
+        idx = np.ascontiguousarray(np.asarray(idx, np.int32))
+        val = np.ascontiguousarray(np.asarray(val, np.float32))
+        if d is None:
+            raise ValueError("sparse build_cache requires d")
+        y, _, idx, val = pad_examples(y, mult, idx=idx, val=val)
+        n = y.shape[0]
+        nnz = idx.shape[1]
+        nb = n // bucket
+        arrays = {
+            "idx": idx.reshape(pods, nb // pods, bucket, nnz),
+            "val": val.reshape(pods, nb // pods, bucket, nnz)}
+        d_pad = d
+    arrays["y"] = y.reshape(pods, nb // pods, bucket)
+
+    meta = CacheMeta(name=name, kind=kind, n=n, n_examples=n_examples,
+                     d=d, d_pad=d_pad, bucket=bucket, pods=pods,
+                     nnz=nnz, objective=objective)
+    path.mkdir(parents=True, exist_ok=True)
+    crcs = {}
+    for aname, arr in arrays.items():
+        arr = np.ascontiguousarray(arr)
+        crcs[aname] = zlib.crc32(arr.tobytes())
+        arr.tofile(path / f"{aname}.bin")
+    doc = dict(dataclasses.asdict(meta), crc32=crcs)
+    (path / "meta.json").write_text(
+        json.dumps(doc, sort_keys=True, indent=1) + "\n")
+    return open_cache(path)
+
+
+def open_cache(path, *, verify: bool = False) -> "TileCache":
+    """mmap an existing cache directory; validates magic/version/sizes."""
+    path = pathlib.Path(path)
+    doc = json.loads((path / "meta.json").read_text())
+    if doc.get("magic") != CACHE_MAGIC:
+        raise ValueError(f"{path}: not a {CACHE_MAGIC} directory")
+    if doc.get("version") != CACHE_VERSION:
+        raise ValueError(f"{path}: cache version {doc.get('version')} != "
+                         f"supported {CACHE_VERSION}; rebuild the cache")
+    crcs = doc.pop("crc32", {})
+    meta = CacheMeta(**{f.name: doc[f.name]
+                        for f in dataclasses.fields(CacheMeta)})
+    arrays = {}
+    for aname, (shape, dtype) in meta.array_specs().items():
+        f = path / f"{aname}.bin"
+        want = int(np.prod(shape)) * np.dtype(dtype).itemsize
+        if f.stat().st_size != want:
+            raise ValueError(
+                f"{f}: {f.stat().st_size} bytes on disk, expected {want} "
+                f"for shape {shape} — cache is truncated or corrupt")
+        mm = np.memmap(f, dtype=dtype, mode="r", shape=shape)
+        if verify and zlib.crc32(mm.tobytes()) != crcs.get(aname):
+            raise ValueError(f"{f}: crc32 mismatch — cache is corrupt")
+        arrays[aname] = mm
+    return TileCache(meta=meta, path=path, arrays=arrays)
+
+
+@dataclasses.dataclass
+class TileCache:
+    """An opened cache: meta + read-only memmaps of the tile arrays."""
+    meta: CacheMeta
+    path: pathlib.Path
+    arrays: dict[str, np.memmap]
+
+    def _flat(self, name: str) -> np.ndarray:
+        """(pods, nb_pod, ...) view -> (n_buckets, ...) for id math."""
+        a = self.arrays[name]
+        return a.reshape((self.meta.n_buckets,) + a.shape[2:])
+
+    # -- bulk load (the in-memory path) ----------------------------------
+    def load_arrays(self):
+        """Unpack tiles to flat example order, fully in memory.
+
+        Dense: (X (d, n), y).  Sparse: ((idx, val), y).  Exactly the
+        arrays `build_cache` packed (padding included), so in-memory
+        and streamed training see identical data.
+        """
+        m = self.meta
+        y = np.ascontiguousarray(self._flat("y")).reshape(m.n)
+        if m.kind == "dense":
+            t = np.ascontiguousarray(self._flat("X"))  # (nb, d_pad, B)
+            X = np.transpose(t, (1, 0, 2)).reshape(m.d_pad, m.n)[:m.d]
+            return np.ascontiguousarray(X), y
+        idx = np.ascontiguousarray(self._flat("idx")).reshape(m.n, m.nnz)
+        val = np.ascontiguousarray(self._flat("val")).reshape(m.n, m.nnz)
+        return (idx, val), y
+
+    # -- tile gather (the out-of-core path) ------------------------------
+    def gather_buckets(self, bids: np.ndarray):
+        """Gather whole bucket tiles by GLOBAL bucket id.
+
+        bids (*lead, nb) int -> dense  (data (*lead, d, nb*B), y ...)
+                              -> sparse ((idx, val) (*lead, nb*B, nnz), y)
+        Only the touched tiles are read from the mmap.
+        """
+        m = self.meta
+        bids = np.asarray(bids)
+        lead, nb = bids.shape[:-1], bids.shape[-1]
+        y = self._flat("y")[bids].reshape(lead + (nb * m.bucket,))
+        if m.kind == "dense":
+            t = self._flat("X")[bids]          # (*lead, nb, d_pad, B)
+            t = np.swapaxes(t, -3, -2).reshape(
+                lead + (m.d_pad, nb * m.bucket))
+            return t[..., :m.d, :], y
+        idx = self._flat("idx")[bids].reshape(
+            lead + (nb * m.bucket, m.nnz))
+        val = self._flat("val")[bids].reshape(
+            lead + (nb * m.bucket, m.nnz))
+        return (idx, val), y
+
+    def feed(self) -> "TileFeed":
+        return TileFeed(self)
+
+
+# ---------------------------------------------------------------------------
+# ChunkFeed implementations (the protocol lives in core.engine)
+# ---------------------------------------------------------------------------
+
+
+class TileFeed:
+    """`ChunkFeed` over a `TileCache`: mmap gather + device put."""
+
+    def __init__(self, cache: TileCache):
+        self.cache = cache
+        m = cache.meta
+        self.n, self.d, self.bucket = m.n, m.d, m.bucket
+        self.sparse = m.kind == "sparse"
+
+    def fetch(self, bids: np.ndarray):
+        import jax
+        data, y = self.cache.gather_buckets(bids)
+        if self.sparse:
+            idx, val = data
+            return ((jax.device_put(idx), jax.device_put(val)),
+                    jax.device_put(y))
+        return jax.device_put(np.ascontiguousarray(data)), jax.device_put(y)
+
+
+class ArrayFeed:
+    """`ChunkFeed` over resident host arrays — the in-memory twin of
+    `TileFeed`, used by tests to separate cache exactness from the
+    streamed-loop contract."""
+
+    def __init__(self, y, *, X=None, idx=None, val=None,
+                 d: int | None = None, bucket: int = 16):
+        self.y = np.asarray(y, np.float32)
+        self.n, self.bucket = self.y.shape[0], bucket
+        self.sparse = X is None
+        if self.sparse:
+            self.idx = np.asarray(idx, np.int32)
+            self.val = np.asarray(val, np.float32)
+            self.d = int(d)
+        else:
+            self.X = np.asarray(X, np.float32)
+            self.d = self.X.shape[0]
+
+    def _cols(self, bids: np.ndarray) -> np.ndarray:
+        B = self.bucket
+        return (bids[..., None] * B
+                + np.arange(B, dtype=np.int32)).reshape(
+                    bids.shape[:-1] + (-1,))
+
+    def fetch(self, bids: np.ndarray):
+        import jax
+        cols = self._cols(np.asarray(bids))
+        y = jax.device_put(self.y[cols])
+        if self.sparse:
+            return ((jax.device_put(self.idx[cols]),
+                     jax.device_put(self.val[cols])), y)
+        data = np.moveaxis(self.X[:, cols], 0, -2)   # (*lead, d, m)
+        return jax.device_put(np.ascontiguousarray(data)), y

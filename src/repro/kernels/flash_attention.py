@@ -27,9 +27,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-# jax renamed TPUCompilerParams -> CompilerParams; support both.
-_compiler_params = getattr(pltpu, "CompilerParams", None) \
-    or pltpu.TPUCompilerParams
+from .pallas_compat import compiler_params as _compiler_params
 
 
 NEG_INF = -1e30

@@ -6,7 +6,6 @@ through the kernel with cfg.use_kernel=True.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

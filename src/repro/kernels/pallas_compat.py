@@ -1,0 +1,11 @@
+"""Version-compat shims for the Pallas TPU API (one home, three users).
+
+jax renamed ``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams``;
+every kernel imports the resolved constructor from here so the next
+rename is a one-line fix (the AbstractMesh analogue lives in
+launch/mesh.py).
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+compiler_params = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

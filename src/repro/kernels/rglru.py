@@ -22,11 +22,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-# jax renamed TPUCompilerParams -> CompilerParams; support both.
-_compiler_params = getattr(pltpu, "CompilerParams", None) \
-    or pltpu.TPUCompilerParams
+from .pallas_compat import compiler_params as _compiler_params
 
 
 _C = 8.0

@@ -29,7 +29,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
-import jax
 
 from repro.models.lm import layer_layout
 from .hlo_analysis import collective_bytes

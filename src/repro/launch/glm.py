@@ -113,6 +113,31 @@ GLM_CONFIGS = {
 }
 
 
+def scale_for_dataset(name: str, **overrides) -> GLMScale:
+    """Registry dataset -> a deployment-scale `GLMScale`.
+
+    Sizes come from the dataset registry's REAL shapes (not the offline
+    sub-samples): n is padded to a 32k multiple and d/nnz to mesh- and
+    tile-friendly multiples, mirroring how the hand-written GLM_CONFIGS
+    entries were derived from the paper's tables.  Wide dense datasets
+    (d >= 512) default to feature sharding over 'model'.
+    """
+    from repro.data.registry import get_spec
+
+    spec = get_spec(name)
+    n = -(-spec.full_n // 32_768) * 32_768
+    d = -(-spec.full_d // 4_096) * 4_096 if spec.full_d >= 4_096 \
+        else spec.full_d
+    kw = dict(name=f"glm-{name}", kind=spec.kind, n=n, d=d,
+              lam=spec.lam)
+    if spec.kind == "sparse":
+        kw["nnz"] = -(-spec.nnz // 8) * 8
+    else:
+        kw["feature_shard"] = spec.full_d >= 512
+    kw.update(overrides)
+    return GLMScale(**kw)
+
+
 def _axes(mesh, scale: GLMScale):
     """-> (example_axes, sync_axes, has_pod, model_is_tp)."""
     names = mesh.axis_names
@@ -218,7 +243,13 @@ def glm_input_specs(scale: GLMScale, mesh):
 
 
 def lower_glm(arch: str, mesh):
-    scale = GLM_CONFIGS[arch]
+    """Lower a GLM epoch program: named config or registry dataset.
+
+    `arch` is a GLM_CONFIGS key ("glm-criteo", ...) or a dataset
+    registry name ("higgs", "criteo-kaggle-sub", ...), which is sized
+    via `scale_for_dataset`."""
+    scale = (GLM_CONFIGS[arch] if arch in GLM_CONFIGS
+             else scale_for_dataset(arch))
     make = make_sparse_epoch if scale.kind == "sparse" else make_dense_epoch
     epoch = make(scale, mesh)
     inputs = glm_input_specs(scale, mesh)

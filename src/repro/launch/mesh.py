@@ -18,7 +18,6 @@ from __future__ import annotations
 import math
 
 import jax
-import numpy as np
 from jax.sharding import AbstractMesh
 
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per v5e chip

@@ -120,11 +120,16 @@ def input_specs(cfg, shape: ShapeCfg, mesh):
     for a in (baxes if isinstance(baxes, tuple) else (baxes,)):
         bdiv *= mesh.shape.get(a, 1)
     bspec = baxes if B % bdiv == 0 else None   # batch=1 cells replicate
-    tok = lambda b, s: _sds(mesh, (b, s), jnp.int32, P(bspec, None))
-    frames = lambda: _sds(mesh, (B, cfg.enc_seq, cfg.d_model),
-                          jnp.float32, P(bspec, None, None))
-    patches = lambda s_tok: _sds(mesh, (B, cfg.n_patches, cfg.d_model),
-                                 jnp.float32, P(bspec, None, None))
+    def tok(b, s):
+        return _sds(mesh, (b, s), jnp.int32, P(bspec, None))
+
+    def frames():
+        return _sds(mesh, (B, cfg.enc_seq, cfg.d_model),
+                    jnp.float32, P(bspec, None, None))
+
+    def patches(s_tok):
+        return _sds(mesh, (B, cfg.n_patches, cfg.d_model),
+                    jnp.float32, P(bspec, None, None))
 
     if shape.kind == "train":
         out = {"tokens": tok(B, S), "labels": tok(B, S)}

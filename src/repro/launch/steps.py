@@ -9,15 +9,13 @@ the same layout so steps chain without resharding.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models import lm
-from repro.models.layers import ParamSpec, materialize, pspecs_of
+from repro.models.layers import ParamSpec, materialize
 from repro.optim import adamw
 from .specs import clean_pspec
 

@@ -15,8 +15,6 @@ Modes:
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Optional
 
 import jax
@@ -26,7 +24,7 @@ from jax.sharding import PartitionSpec as P
 from . import attention as attn
 from . import moe as moe_lib
 from . import recurrent as rec
-from .layers import ParamSpec, act_fn, layernorm, mlp_apply, mlp_specs, rmsnorm
+from .layers import ParamSpec, layernorm, mlp_apply, mlp_specs, rmsnorm
 
 Array = jax.Array
 BATCH_AXES = ("pod", "data")

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .layers import ParamSpec, act_fn
+from .layers import ParamSpec
 
 Array = jax.Array
 _RG_C = 8.0
@@ -270,7 +270,10 @@ def slstm_specs(cfg) -> dict:
 
 def slstm_cache_shape(cfg, batch: int) -> dict:
     d = cfg.d_model
-    z = lambda: jax.ShapeDtypeStruct((batch, d), jnp.float32)
+
+    def z():
+        return jax.ShapeDtypeStruct((batch, d), jnp.float32)
+
     return {"c": z(), "n": z(), "m": z(), "h": z()}
 
 

@@ -11,7 +11,6 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.objectives import Objective
 

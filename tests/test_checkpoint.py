@@ -1,5 +1,4 @@
 """Checkpoint manager: atomicity, keep-N, bit-exact restart (GLM + LM)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -11,7 +10,7 @@ from repro.configs import get_smoke
 from repro.core import GLMTrainer, SolverConfig
 from repro.data import make_dense_classification
 from repro.launch import steps as steps_lib, train as train_mod
-from repro.optim import adamw
+
 
 
 def test_save_restore_roundtrip(tmp_path):

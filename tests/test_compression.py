@@ -5,7 +5,7 @@ import pytest
 pytest.importorskip("hypothesis")  # optional test dep
 from hypothesis import given, settings, strategies as st
 
-from repro.optim.compression import Quantized, compress, dequantize
+from repro.optim.compression import compress, dequantize
 
 
 @given(st.integers(0, 10_000))

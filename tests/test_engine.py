@@ -10,10 +10,9 @@ import sys
 import textwrap
 
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.core import (AlgoConfig, DeploymentConfig, EngineConfig,
+from repro.core import (AlgoConfig, EngineConfig,
                         SolverConfig, as_engine_config, make_local_solver)
 from repro.core.objectives import LOGISTIC
 

@@ -1,5 +1,4 @@
 """Pallas kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -101,7 +100,6 @@ def test_rglru_kernel_dtypes(dtype):
 def test_kernel_rejects_bad_tile():
     with pytest.raises(ValueError):
         from repro.kernels import sdca_bucket
-        import functools
         sdca_bucket.sdca_bucket_kernel(
             LOGISTIC, jnp.zeros((2, 9, 8)), jnp.zeros((2, 8)),
             jnp.zeros((2, 8)), jnp.zeros((9, 1)), jnp.zeros(2), True)

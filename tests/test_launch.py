@@ -1,10 +1,8 @@
 """Launch-layer units: HLO collective parsing, roofline math, serve
 driver, sharding context, GLM analytic model."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import PartitionSpec as P
 
 from repro.launch.hlo_analysis import (Roofline, collective_bytes,
                                        _shape_bytes)

@@ -1,5 +1,4 @@
 """Optimizer substrate: AdamW dtype variants, LBFGS, compression."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

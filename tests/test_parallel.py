@@ -108,7 +108,6 @@ def test_chunked_sync_converges(dense_data):
 def test_straggler_mask_still_converges(dense_data):
     """A dead lane per epoch only slows convergence (over-decomposition
     story): updates of masked lanes are dropped, model remains valid."""
-    import jax
     from repro.core import cocoa
     from repro.core.bucketing import make_plan
     from repro.core.partition import PartitionPlan

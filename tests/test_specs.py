@@ -4,7 +4,6 @@ Uses AbstractMesh so the production 256/512-chip shardings are checked
 without device allocation (smoke processes only have 1 CPU device).
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
