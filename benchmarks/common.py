@@ -10,8 +10,10 @@ from __future__ import annotations
 import time
 
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import EngineConfig, GLMTrainer
+from repro.api import Session
+from repro.core import EngineConfig
 from repro.data import registry
 
 # reduced-scale materializations of registry datasets (paper: criteo
@@ -35,20 +37,99 @@ def load(name):
     return dict(X=ds.X, y=ds.y, d=ds.d, sparse=False, scale=ds.scale)
 
 
+def make_session(data, cfg: EngineConfig, *, lam=1e-3) -> Session:
+    """Benchmark arrays dict -> `repro.api.Session` (the one driver)."""
+    kw = dict(d=data["d"]) if data["sparse"] else {}
+    return Session(data["X"], data["y"], objective="logistic", lam=lam,
+                   cfg=cfg, pad=False, **kw)
+
+
 def fit_timed(data, cfg: EngineConfig, *, lam=1e-3, max_epochs=80,
               tol=1e-3):
     """cfg: EngineConfig (or legacy SolverConfig; both are accepted)."""
-    kw = dict(sparse=True, d=data["d"]) if data["sparse"] else {}
-    tr = GLMTrainer(data["X"], data["y"], objective="logistic", lam=lam,
-                    cfg=cfg, **kw)
+    ses = make_session(data, cfg, lam=lam)
     # warm the jit so timings exclude compilation
-    tr._epoch_fn(tr.alpha, tr.v, jnp.int32(0))
+    ses._epoch_fn(ses.alpha, ses.v, jnp.int32(0))
     t0 = time.perf_counter()
-    res = tr.fit(max_epochs=max_epochs, tol=tol)
+    res = ses.fit(max_epochs=max_epochs, tol=tol)
     wall = time.perf_counter() - t0
     return dict(epochs=res.epochs, converged=res.converged,
                 diverged=res.diverged, gap=res.final_gap, wall_s=wall,
                 s_per_epoch=wall / max(res.epochs, 1))
+
+
+# -- sklearn head-to-head arm (fig3/fig6 `--impl sklearn`) ------------------
+
+
+def to_sklearn_inputs(data):
+    """Engine arrays -> sklearn layout: dense (n, d) or scipy CSR.
+
+    Returns (X_sk, y) or None when scipy is needed but unavailable.
+    """
+    y = np.asarray(data["y"])
+    if not data["sparse"]:
+        return np.asarray(data["X"]).T, y
+    try:
+        from scipy import sparse as sp
+    except ImportError:
+        return None
+    idx, val = (np.asarray(t) for t in data["X"])
+    n, nnz = idx.shape
+    rows = np.repeat(np.arange(n), nnz)
+    mat = sp.csr_matrix((val.ravel(), (rows, idx.ravel())),
+                        shape=(n, data["d"]))
+    return mat, y
+
+
+def sklearn_logreg(data, *, lam=1e-3, max_iter=200):
+    """Fit sklearn's LogisticRegression at the EXACT same objective
+    (C = 1/(lam*n), no intercept) — the paper's baseline.  Returns
+    dict(wall_s, clf, X, y) or None when sklearn is not installed."""
+    try:
+        from sklearn.linear_model import LogisticRegression as SkLR
+    except ImportError:
+        return None
+    inputs = to_sklearn_inputs(data)
+    if inputs is None:
+        return None
+    X, y = inputs
+    clf = SkLR(C=1.0 / (lam * y.shape[0]), fit_intercept=False,
+               solver="lbfgs", max_iter=max_iter, tol=1e-6)
+    t0 = time.perf_counter()
+    clf.fit(X, y)
+    return dict(wall_s=time.perf_counter() - t0, clf=clf, X=X, y=y)
+
+
+def estimator_arm(data, *, lam=1e-3, max_epochs=80, tol=1e-4, lanes=8,
+                  bucket=8):
+    """Fit `repro.api.LogisticRegression` on the same workload; returns
+    dict(wall_s, est, score)."""
+    from repro.api import LogisticRegression
+
+    inputs = to_sklearn_inputs(data)
+    est = LogisticRegression(lam=lam, max_epochs=max_epochs, tol=tol,
+                             lanes=lanes, bucket=bucket,
+                             partition="dynamic",
+                             n_features=data["d"])
+    # sparse fits on the engine (idx, val) pair; dense reuses the
+    # transpose to_sklearn_inputs already materialized
+    Xfit = data["X"] if data["sparse"] else inputs[0]
+    t0 = time.perf_counter()
+    est.fit(Xfit, np.asarray(data["y"]))
+    wall = time.perf_counter() - t0
+    score = (est.score(*inputs) if inputs is not None else float("nan"))
+    return dict(wall_s=wall, est=est, score=score, inputs=inputs)
+
+
+def parity_metrics(est_arm, sk_arm) -> dict:
+    """Agreement between our estimator and sklearn on the train set:
+    the fig3/fig6 parity numbers CI uploads."""
+    X, y = sk_arm["X"], sk_arm["y"]
+    pr = est_arm["est"].predict(X)          # dense ndarray or scipy CSR
+    ps = sk_arm["clf"].predict(X)
+    return dict(score=est_arm["score"],
+                score_sklearn=float(sk_arm["clf"].score(X, y)),
+                predict_agree=float(np.mean(pr == ps)))
 
 
 def emit(rows, header):

@@ -1,0 +1,99 @@
+"""Diff two bench-summary JSONs and fail on perf regressions.
+
+    python -m benchmarks.compare PREV.json NEW.json \
+        [--runtime-tol 0.2] [--gap-tol 0.2]
+
+CI's `bench-smoke` job downloads the previous run's `BENCH_*.json`
+artifact and runs this against the fresh one (the ROADMAP
+"perf trajectory" item): exit 1 when any figure got >20% slower or its
+final duality gap got >20% worse, when a previously-passing figure now
+fails, or when a figure disappeared.  A missing/unreadable PREV (first
+run, expired artifact) is a clean pass — there is nothing to diff.
+
+Quick-mode and full-mode summaries are never compared against each
+other (sizes differ by design; the `quick` flag is checked first).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def _load(path) -> dict | None:
+    p = pathlib.Path(path)
+    if not p.exists():
+        return None
+    try:
+        doc = json.loads(p.read_text())
+    except (OSError, json.JSONDecodeError):
+        return None
+    return doc if doc.get("schema", "").startswith("bench-summary") \
+        else None
+
+
+def compare(prev: dict, new: dict, *, runtime_tol: float = 0.2,
+            gap_tol: float = 0.2) -> list[str]:
+    """-> list of regression messages (empty = pass)."""
+    problems: list[str] = []
+    if prev.get("quick") != new.get("quick") \
+            or prev.get("workload") != new.get("workload"):
+        return []   # different scale or workload; nothing comparable
+    pf, nf = prev.get("figures", {}), new.get("figures", {})
+    for name, p in pf.items():
+        n = nf.get(name)
+        if n is None:
+            problems.append(f"{name}: figure disappeared from the run")
+            continue
+        if n.get("failed") and not p.get("failed"):
+            problems.append(f"{name}: now FAILING (previously passing)")
+            continue
+        if p.get("failed") or n.get("failed"):
+            continue              # was already broken; tier-1 owns that
+        rt_p, rt_n = p.get("runtime_s"), n.get("runtime_s")
+        if rt_p and rt_n and rt_n > rt_p * (1 + runtime_tol):
+            problems.append(
+                f"{name}: runtime {rt_n:.1f}s vs {rt_p:.1f}s "
+                f"(+{(rt_n / rt_p - 1) * 100:.0f}% > "
+                f"{runtime_tol * 100:.0f}% budget)")
+        g_p, g_n = p.get("final_gap"), n.get("final_gap")
+        if g_p is not None and g_n is not None and g_p > 0 \
+                and g_n > g_p * (1 + gap_tol):
+            problems.append(
+                f"{name}: final gap {g_n:.3e} vs {g_p:.3e} "
+                f"(worse by {(g_n / g_p - 1) * 100:.0f}% > "
+                f"{gap_tol * 100:.0f}% budget)")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("prev")
+    ap.add_argument("new")
+    ap.add_argument("--runtime-tol", type=float, default=0.2)
+    ap.add_argument("--gap-tol", type=float, default=0.2)
+    args = ap.parse_args(argv)
+
+    new = _load(args.new)
+    if new is None:
+        print(f"compare: cannot read new summary {args.new}")
+        return 1
+    prev = _load(args.prev)
+    if prev is None:
+        print(f"compare: no previous summary at {args.prev}; "
+              "baseline accepted")
+        return 0
+    problems = compare(prev, new, runtime_tol=args.runtime_tol,
+                       gap_tol=args.gap_tol)
+    if problems:
+        print("perf regressions vs previous run:")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print("compare: no perf regressions vs previous run")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,26 +1,61 @@
 """Paper Fig 3: wild vs domesticated time-to-convergence on the three
-datasets x two 'machines' (2-pod and 4-pod mesh geometries).
+datasets x two 'machines' (2-pod and 4-pod mesh geometries), plus an
+optional scikit-learn head-to-head arm through the estimator API.
 
 Standalone it takes real dataset names from the registry:
 
     python -m benchmarks.fig3_convergence --dataset higgs \
-        --dataset criteo-kaggle-sub
+        --dataset criteo-kaggle-sub --impl sklearn
 
 (any `repro.data.registry` name or benchmark alias works; a raw
 svmlight/CSV file under $REPRO_DATA_DIR is ingested automatically).
+`--impl sklearn` adds two rows per dataset — `estimator`
+(`repro.api.LogisticRegression`, the paper's solver behind the sklearn
+protocol) and `sklearn` (the real `sklearn.linear_model`, identical
+objective: C = 1/(lam n), no intercept) — with train-score parity and
+prediction-agreement columns; skipped silently when sklearn is absent.
 """
 from __future__ import annotations
 
 import argparse
 
 from repro.core import SolverConfig
-from .common import DATASETS, emit, fit_timed, load
+
+from .common import (DATASETS, emit, estimator_arm, fit_timed, load,
+                     parity_metrics, sklearn_logreg)
 
 HEADER = ["bench", "dataset", "machine", "impl", "lanes", "epochs",
-          "converged", "gap", "wall_s", "speedup_vs_wild"]
+          "converged", "gap", "gap_est", "wall_s", "speedup_vs_wild",
+          "score", "score_sklearn", "predict_agree"]
 
 
-def run(quick: bool = False, datasets: list[str] | None = None):
+def _sklearn_rows(name: str, data, quick: bool) -> list[dict]:
+    sk = sklearn_logreg(data, max_iter=100 if quick else 200)
+    if sk is None:
+        return []
+    est = estimator_arm(data, max_epochs=40 if quick else 80)
+    par = (parity_metrics(est, sk) if est["inputs"] is not None
+           else dict(score=est["score"]))
+    # the estimator arm's gap goes in its OWN column: run.py's
+    # final_gap (what benchmarks/compare.py gates on) keeps tracking
+    # the paper's domesticated arm, not this differently-configured one
+    rows = [dict(bench="fig3", dataset=name, machine="-",
+                 impl="estimator", lanes=8,
+                 epochs=est["est"].n_iter_,
+                 converged=est["est"].fit_result_.converged,
+                 gap_est=est["est"].fit_result_.final_gap,
+                 wall_s=est["wall_s"], **par),
+            dict(bench="fig3", dataset=name, machine="-",
+                 impl="sklearn", lanes=1, wall_s=sk["wall_s"],
+                 score=par.get("score_sklearn"))]
+    return rows
+
+
+def run(quick: bool = False, datasets: list[str] | None = None,
+        impls: list[str] | None = None):
+    if impls is None:
+        impls = ["sklearn"]       # auto-arm; _sklearn_rows no-ops when
+                                  # sklearn is not installed
     rows = []
     names = datasets or (["higgs"] if quick else list(DATASETS))
     for name in names:
@@ -47,6 +82,8 @@ def run(quick: bool = False, datasets: list[str] | None = None):
                              converged=dom["converged"],
                              gap=dom["gap"], wall_s=dom["wall_s"],
                              speedup_vs_wild=speed))
+        if impls and "sklearn" in impls:
+            rows.extend(_sklearn_rows(name, data, quick))
     return emit(rows, HEADER)
 
 
@@ -55,7 +92,9 @@ if __name__ == "__main__":
     ap.add_argument("--dataset", action="append", default=None,
                     help="registry dataset name or benchmark alias; "
                          "repeatable (default: the paper's three)")
+    ap.add_argument("--impl", action="append", default=None,
+                    help="extra head-to-head arms; currently: sklearn")
     ap.add_argument("--full", action="store_true",
                     help="run all default datasets, not the quick subset")
     args = ap.parse_args()
-    run(quick=not args.full, datasets=args.dataset)
+    run(quick=not args.full, datasets=args.dataset, impls=args.impl)

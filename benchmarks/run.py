@@ -19,6 +19,12 @@ from . import (fig1_wild_convergence, fig2_scaling_partitions,
                fig3_convergence, fig4_strong_scaling, fig5_ablations,
                fig6_solvers, roofline)
 
+# Bump when a figure's WORKLOAD changes (new arms, different sizes):
+# benchmarks/compare.py only diffs runs with equal workload versions,
+# so intentional changes reset the perf baseline instead of tripping
+# the >20% regression gate.  v2: fig3/fig6 sklearn+estimator arms.
+WORKLOAD_VERSION = 2
+
 BENCHES = [
     ("fig1_wild_convergence", fig1_wild_convergence),
     ("fig2_scaling_partitions", fig2_scaling_partitions),
@@ -66,12 +72,22 @@ def main(argv=None) -> int:
         total += len(rows)
         figures[name] = {"failed": False, "runtime_s": dt,
                          "rows": len(rows), "final_gap": _final_gap(rows)}
+        # sklearn-parity metrics from the fig3/fig6 estimator arms go
+        # into the artifact so CI can track drift across runs
+        parity = [{k: r.get(k) for k in ("dataset", "impl", "solver",
+                                         "score", "score_sklearn",
+                                         "predict_agree")
+                   if r.get(k) is not None}
+                  for r in rows if r.get("predict_agree") is not None]
+        if parity:
+            figures[name]["parity"] = parity
         print(f"----- {name}: {len(rows)} rows in {dt:.1f}s")
 
     print(f"\nbenchmarks complete: {total} rows"
           + (f", {len(failed)} FAILED: {failed}" if failed else ""))
     if args.json:
         summary = {"schema": "bench-summary/v1",
+                   "workload": WORKLOAD_VERSION,
                    "quick": not args.full,
                    "figures": figures, "total_rows": total,
                    "failed": failed}

@@ -15,7 +15,8 @@ import tempfile
 
 import numpy as np
 
-from repro.core import EngineConfig, fit_dataset
+from repro.api import Session
+from repro.core import EngineConfig
 from repro.data import get_spec
 
 
@@ -45,16 +46,18 @@ def main() -> None:
                             partition="hierarchical",
                             deterministic=args.verify)
     cache_dir = args.cache_dir or tempfile.mkdtemp(prefix="repro-cache-")
-    common = dict(cfg=cfg, n=args.n, cache_dir=cache_dir,
-                  data_dir=args.data_dir, max_epochs=args.epochs,
-                  tol=1e-4, gap_every=10, verbose=True)
+    ses_kw = dict(cfg=cfg, n=args.n, cache_dir=cache_dir,
+                  data_dir=args.data_dir)
+    fit_kw = dict(max_epochs=args.epochs, tol=1e-4, gap_every=10,
+                  verbose=True)
 
     modes = [args.streamed] if not args.verify else [False, True]
     results = {}
     for streamed in modes:
         label = "streamed" if streamed else "in-memory"
         print(f"\n== {label} training ==")
-        res = fit_dataset(args.dataset, streamed=streamed, **common)
+        res = Session(args.dataset, streamed=streamed, **ses_kw).fit(
+            **fit_kw)
         print(f"{label}: epochs={res.epochs} converged={res.converged} "
               f"gap={res.final_gap:.3e} wall={res.wall_time:.2f}s")
         results[streamed] = res

@@ -13,8 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import LogisticRegression
 from repro.configs import get_smoke
-from repro.core import GLMTrainer, SolverConfig
 from repro.data.loader import markov_batch
 from repro.launch import steps as steps_lib
 from repro.models import lm
@@ -50,20 +50,18 @@ def main() -> None:
     # train split must divide into (bucket x lanes) blocks: 768 = 8*8*12
     ntr = (int(0.8 * len(labels)) // 64) * 64
 
-    X = feats.T                       # (d, n) layout the solver expects
-    X /= np.maximum(np.linalg.norm(X, axis=0, keepdims=True), 1e-9)
-    cfg_s = SolverConfig(pods=1, lanes=8, bucket=8, partition="dynamic")
-    tr = GLMTrainer(X[:, :ntr], labels[:ntr], objective="logistic",
-                    lam=1e-4, cfg=cfg_s)
-    res = tr.fit(max_epochs=60, tol=1e-5, verbose=True)
-
-    def acc(Xs, ys):
-        return float(np.mean(np.sign(Xs.T @ res.v) == ys))
+    feats /= np.maximum(
+        np.linalg.norm(feats, axis=1, keepdims=True), 1e-9)
+    probe = LogisticRegression(lam=1e-4, lanes=8, bucket=8,
+                               partition="dynamic", max_epochs=60,
+                               tol=1e-5, verbose=True)
+    probe.fit(feats[:ntr], labels[:ntr])       # sklearn layout (n, d)
+    res = probe.fit_result_
 
     print(f"\nconverged={res.converged} epochs={res.epochs} "
           f"gap={res.final_gap:.2e}")
-    print(f"train acc={acc(X[:, :ntr], labels[:ntr]):.3f} "
-          f"test acc={acc(X[:, ntr:], labels[ntr:]):.3f}")
+    print(f"train acc={probe.score(feats[:ntr], labels[:ntr]):.3f} "
+          f"test acc={probe.score(feats[ntr:], labels[ntr:]):.3f}")
 
 
 if __name__ == "__main__":

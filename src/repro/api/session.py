@@ -1,0 +1,461 @@
+"""`Session`: the ONE owner of GLM solver state for every front end.
+
+Every way of training the paper's solver — resident arrays, registry
+dataset names, bucket-tile caches, out-of-core `ChunkFeed`s — used to
+have its own driver (`GLMTrainer`, `StreamedGLMTrainer`, `fit_dataset`,
+`cocoa.epoch_sim*`).  A `Session` subsumes them: it resolves the data
+source once, owns the engine state (`alpha`, `v`, epoch counter, the
+jitted epoch program), and exposes epoch-level control:
+
+    s = Session((X, y), objective="logistic", lam=1e-3, cfg=cfg)
+    s.epoch()                 # run exactly one epoch, get metrics back
+    s.fit(until=10)           # train up to absolute epoch 10
+    s.fit(max_epochs=5)       # ... or 5 more epochs from wherever we are
+
+`fit` drives a callback protocol (`on_epoch_end(metrics) -> stop?`,
+see `repro.api.callbacks`) used for early stopping, gap logging,
+checkpoint hooks, and benchmark recording.  The sklearn-style
+estimators in `repro.api.estimators` are thin facades over a Session;
+the legacy trainers are deprecation shims over it (DESIGN.md S10).
+
+Data sources accepted by the constructor, uniformly:
+
+  * ``(X, y)``            dense arrays, engine layout ``X (d, n)``;
+  * ``((idx, val), y)``   padded-CSR sparse (requires ``d=``);
+  * ``"higgs"``           any `repro.data.registry` name (honouring
+                          ``streamed=``/``cache_dir=``/``data_dir=``);
+  * a `TileCache`         in-memory (``streamed=False``) or out-of-core;
+  * a `ChunkFeed`         streamed training over any feed.
+
+Examples are PADDED (x=0, y=+1 — inert, a zero row never moves v) up
+to the multiple the chosen topology needs, so any sklearn-shaped n
+trains without manual padding; ``n_examples`` records the true count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine, objectives
+from repro.core.bucketing import BucketPlan, make_plan
+from repro.core.config import EngineConfig, as_engine_config
+from repro.core.objectives import Objective, get_objective
+from repro.core.partition import PartitionPlan
+from repro.core.trainer import FitResult
+
+Array = jax.Array
+
+__all__ = ["Session", "margins"]
+
+
+def margins(v, data) -> jnp.ndarray:
+    """Decision margins x_i^T v for engine-layout data.
+
+    ``data`` is dense ``X (d, n)`` or a padded-CSR ``(idx, val)`` pair;
+    returns ``(n,)``.  The one margin kernel shared by estimator
+    ``decision_function``/``predict`` and the serving batch path.
+    """
+    if isinstance(data, (tuple, list)):
+        idx, val = data
+        return jnp.sum(jnp.asarray(v)[jnp.asarray(idx)]
+                       * jnp.asarray(val), axis=1)
+    return jnp.asarray(data).T @ jnp.asarray(v)
+
+
+def _pad_multiple(spec: EngineConfig, bucket: int) -> int:
+    """Example-count multiple every partition mode divides: the same
+    pods*lanes*lanes*chunks*bucket rule the tile cache builds with."""
+    dep, algo = spec.deployment, spec.algo
+    return dep.pods * dep.lanes * dep.lanes * algo.chunks * max(bucket, 1)
+
+
+class Session:
+    """Engine state + epoch control over one resolved data source."""
+
+    def __init__(self, data, y=None, *, objective: str | Objective | None
+                 = None, lam: Optional[float] = None,
+                 cfg: Any = None, d: Optional[int] = None,
+                 bucket: Optional[int] = None, streamed: bool = False,
+                 cache_dir=None, data_dir=None, n: Optional[int] = None,
+                 pad: bool = True, jit_step: bool = True):
+        self.spec = as_engine_config(cfg) if cfg is not None \
+            else EngineConfig()
+        self.cfg = cfg if cfg is not None else self.spec
+        self.streamed = streamed
+        self.cache = None
+        self.feed = None
+        self.history: list[dict[str, float]] = []
+
+        # `Session((X, y))` / `Session(((idx, val), y))` sugar — only
+        # when the second element is labels-shaped (1-D), so a
+        # forgotten-y `Session((idx, val))` still raises clearly below
+        if (y is None and isinstance(data, (tuple, list))
+                and len(data) == 2 and not hasattr(data[0], "fetch")
+                and np.ndim(data[1]) == 1):
+            data, y = data
+
+        if isinstance(data, str):
+            self._init_from_registry(
+                data, objective=objective, lam=lam, bucket=bucket,
+                streamed=streamed, cache_dir=cache_dir,
+                data_dir=data_dir, n=n, d=d, jit_step=jit_step)
+        elif hasattr(data, "gather_buckets"):      # TileCache
+            self._init_from_cache(data, objective=objective, lam=lam,
+                                  streamed=streamed, jit_step=jit_step)
+        elif hasattr(data, "fetch"):               # ChunkFeed
+            self._init_from_feed(data, objective=objective, lam=lam,
+                                 jit_step=jit_step)
+        else:                                      # arrays
+            if y is None:
+                raise TypeError("array data requires labels: "
+                                "Session((X, y)) or Session(X, y)")
+            self._init_from_arrays(data, y, objective=objective, lam=lam,
+                                   d=d, bucket=bucket, pad=pad,
+                                   jit_step=jit_step)
+
+    # -- construction: one per data source --------------------------------
+
+    def _resolve_obj(self, objective, lam, default_obj="logistic",
+                     default_lam=1e-3) -> None:
+        objective = objective or default_obj
+        self.obj = (objective if isinstance(objective, Objective)
+                    else get_objective(objective))
+        self.lam = float(default_lam if lam is None else lam)
+
+    def _init_from_arrays(self, data, y, *, objective, lam, d, bucket,
+                          pad, jit_step: bool = True) -> None:
+        """Resident-array setup.  When padding grows n -> n', lam is
+        rescaled by n/n' so the padded objective
+
+            (1/n') [sum_real loss + const] + (lam n / (2 n')) ||w||^2
+          = (n/n') * [user objective] + const/n'
+
+        keeps the USER's argmin exactly (and lam*n — the dual scaling —
+        is unchanged); the inert rows' primal/dual terms cancel in the
+        gap once their duals settle, so the certificate stays valid."""
+        self._resolve_obj(objective, lam)
+        sparse = isinstance(data, (tuple, list))
+        y = np.asarray(y, np.float32)
+        self.n_examples = y.shape[0]
+        algo = self.spec.algo
+        force = bucket if bucket is not None else (algo.bucket or None)
+        B = force if force else 1
+        idx = val = X = None
+        if sparse:
+            idx = np.asarray(data[0], np.int32)
+            val = np.asarray(data[1], np.float32)
+            if d is None:
+                raise ValueError("sparse array data requires d")
+            if pad:
+                from repro.data.cache import pad_examples
+                y, _, idx, val = pad_examples(
+                    y, _pad_multiple(self.spec, B), idx=idx, val=val)
+            self.n, self.d = int(y.shape[0]), int(d)
+        else:
+            X = np.asarray(data, np.float32)
+            self.d = int(X.shape[0])
+            if pad:
+                from repro.data.cache import pad_examples
+                y, X, _, _ = pad_examples(
+                    y, _pad_multiple(self.spec, B), X=X)
+            self.n = int(y.shape[0])
+        if self.n > self.n_examples:
+            self.lam *= self.n_examples / self.n
+
+        if self.streamed:
+            # arrays + streamed=True: drive the out-of-core loop over an
+            # ArrayFeed built from the HOST arrays — nothing
+            # example-sized goes device-resident (only alpha/v do)
+            from repro.data.cache import ArrayFeed
+            if sparse:
+                feed = ArrayFeed(y, idx=idx, val=val, d=self.d, bucket=B)
+            else:
+                feed = ArrayFeed(y, X=X, bucket=B)
+            self._init_from_feed(feed, objective=self.obj, lam=self.lam,
+                                 jit_step=jit_step)
+            return
+
+        if sparse:
+            self.idx = jnp.asarray(idx)
+            self.val = jnp.asarray(val)
+        else:
+            self.X = jnp.asarray(X)
+        self.y = jnp.asarray(y)
+        self.sparse = sparse
+
+        dep = self.spec.deployment
+        self.bplan = make_plan(self.n, self.d, force=force or 1)
+        if self.bplan.bucket != algo.bucket:
+            # keep the plan's bucket authoritative (run_epoch chunks by
+            # algo.bucket; single source of truth)
+            algo = dataclasses.replace(algo, bucket=self.bplan.bucket)
+            self.spec = dataclasses.replace(self.spec, algo=algo)
+        self.plan = PartitionPlan(
+            n_buckets=self.bplan.n_buckets, pods=dep.pods,
+            lanes=dep.lanes, mode=algo.partition, seed=algo.seed,
+            redeal_frac=algo.redeal_frac)
+        self._init_state()
+        if sparse:
+            self._epoch_fn = jax.jit(
+                lambda a, v, e: engine.sim_epoch_sparse(
+                    self.obj, self.idx, self.val, self.y, a, v, self.lam,
+                    self.plan, self.bplan, self.spec, e))
+        else:
+            self._epoch_fn = jax.jit(
+                lambda a, v, e: engine.sim_epoch_dense(
+                    self.obj, self.X, self.y, a, v, self.lam,
+                    self.plan, self.bplan, self.spec, e))
+
+    def _init_from_cache(self, cache, *, objective, lam, streamed,
+                         jit_step) -> None:
+        meta = cache.meta
+        self._resolve_obj(objective, lam, default_obj=meta.objective)
+        algo = self.spec.algo
+        if algo.bucket not in (0, 1, meta.bucket):
+            raise ValueError(
+                f"cfg bucket={algo.bucket} != cache bucket={meta.bucket}; "
+                f"rebuild the cache at the training bucket size")
+        if not streamed:
+            arrays, y = cache.load_arrays()
+            kw = dict(objective=self.obj, lam=self.lam,
+                      bucket=meta.bucket, pad=False)
+            if meta.kind == "sparse":
+                self._init_from_arrays(arrays, y, d=meta.d, **kw)
+            else:
+                self._init_from_arrays(arrays, y, d=None, **kw)
+            self.cache = cache
+            self.n_examples = meta.n_examples
+            return
+        self.cache = cache
+        self.streamed = True
+        self._init_from_feed(cache.feed(), objective=self.obj,
+                             lam=self.lam, jit_step=jit_step)
+
+    def _init_from_feed(self, feed, *, objective, lam, jit_step) -> None:
+        self._resolve_obj(objective, lam)
+        self.feed = feed
+        self.streamed = True
+        self.sparse = bool(feed.sparse)
+        self.n, self.d = int(feed.n), int(feed.d)
+        src_cache = getattr(feed, "cache", None)
+        if src_cache is not None:
+            self.n_examples = src_cache.meta.n_examples
+        elif not hasattr(self, "n_examples"):
+            self.n_examples = self.n
+        algo, dep = self.spec.algo, self.spec.deployment
+        if algo.bucket not in (0, 1, feed.bucket):
+            raise ValueError(
+                f"cfg bucket={algo.bucket} != feed bucket={feed.bucket}")
+        self.bplan = BucketPlan(n=self.n, bucket=feed.bucket,
+                                n_buckets=self.n // feed.bucket)
+        self.plan = PartitionPlan(
+            n_buckets=self.bplan.n_buckets, pods=dep.pods,
+            lanes=dep.lanes, mode=algo.partition, seed=algo.seed,
+            redeal_frac=algo.redeal_frac)
+        self._init_state()
+        self._epoch_fn = engine.make_streamed_epoch(
+            self.obj, self.spec, self.plan, self.feed, lam=self.lam,
+            jit_step=jit_step)
+
+    def _init_from_registry(self, name, *, objective, lam, bucket,
+                            streamed, cache_dir, data_dir, n, d,
+                            jit_step) -> None:
+        from repro.data import registry
+
+        spec = registry.get_spec(name)
+        objective = objective or spec.objective
+        lam = spec.lam if lam is None else lam
+        algo, dep = self.spec.algo, self.spec.deployment
+        B = bucket or max(algo.bucket, 1)
+        if streamed or cache_dir is not None:
+            cache = registry.materialize(
+                name, cache_dir, bucket=B, pods=dep.pods, n=n, d=d,
+                pad_multiple=_pad_multiple(self.spec, B),
+                data_dir=data_dir)
+            self._init_from_cache(cache, objective=objective, lam=lam,
+                                  streamed=streamed, jit_step=jit_step)
+            return
+        ds = registry.get_dataset(name, n=n, d=d, data_dir=data_dir)
+        if ds.sparse:
+            self._init_from_arrays((ds.idx, ds.val), ds.y,
+                                   objective=objective, lam=lam,
+                                   d=ds.d, bucket=B, pad=True)
+        else:
+            self._init_from_arrays(ds.X, ds.y, objective=objective,
+                                   lam=lam, d=None, bucket=B, pad=True)
+
+    def _init_state(self) -> None:
+        if not hasattr(self, "n_examples"):
+            self.n_examples = self.n
+        self.alpha = jnp.zeros(self.n, jnp.float32)
+        self.v = jnp.zeros(self.d, jnp.float32)
+        self.epochs_done = 0
+
+    # -- epoch-level control ----------------------------------------------
+
+    def epoch(self) -> dict[str, float]:
+        """Run exactly one epoch; returns {'epoch', 'rel_change', 't'}.
+
+        't' is this epoch's duration when called standalone; inside
+        `fit` the same record's 't' is rewritten to the cumulative
+        fit wall-clock (one shared record, also kept in `history`)."""
+        t0 = time.perf_counter()
+        v_prev = self.v
+        self.alpha, self.v = self._epoch_fn(
+            self.alpha, self.v, jnp.int32(self.epochs_done))
+        self.epochs_done += 1
+        rel = float(jnp.linalg.norm(self.v - v_prev)
+                    / jnp.maximum(jnp.linalg.norm(self.v), 1e-30))
+        rec = {"epoch": self.epochs_done, "rel_change": rel,
+               "t": time.perf_counter() - t0}
+        self.history.append(rec)
+        return rec
+
+    def fit(self, *, until: Optional[int] = None,
+            max_epochs: Optional[int] = None, tol: float = 1e-3,
+            gap_every: int = 0, callbacks: Sequence = (),
+            verbose: bool = False, diverge_above: float = 1e8
+            ) -> FitResult:
+        """Train to `until` (absolute epoch) or `max_epochs` more epochs.
+
+        Stops early when the relative model change drops below `tol`
+        (the paper's stopping rule), when the iterate diverges, or when
+        any callback's `on_epoch_end(metrics)` returns truthy.
+        Re-entrant: a second `fit` continues from the current state, and
+        schedules are pure functions of (seed, epoch), so
+        stop/checkpoint/resume reproduces an uninterrupted run bitwise.
+        """
+        if until is None:
+            until = self.epochs_done + (100 if max_epochs is None
+                                        else max_epochs)
+        elif max_epochs is not None:
+            raise TypeError("pass either until= or max_epochs=, not both")
+        cbs = list(callbacks)
+        for cb in cbs:
+            bind = getattr(cb, "bind", None)
+            if bind is not None:
+                bind(self)
+        needs_gap = any(getattr(cb, "needs_gap", False) for cb in cbs)
+
+        history: list[dict[str, float]] = []
+        t0 = time.perf_counter()
+        converged = diverged = False
+        while self.epochs_done < until:
+            rec = self.epoch()
+            # mutate the record in place so self.history and the
+            # returned FitResult.history stay the SAME objects
+            rec["t"] = time.perf_counter() - t0
+            want_gap = needs_gap or (
+                gap_every and self.epochs_done % gap_every == 0)
+            vmax = float(jnp.max(jnp.abs(self.v)))
+            if not np.isfinite(vmax) or vmax > diverge_above:
+                diverged = True
+                history.append(rec)
+                break
+            if want_gap:
+                rec["gap"] = self.gap()
+            history.append(rec)
+            if verbose:
+                print(f"epoch {self.epochs_done:4d} "
+                      f"rel={rec['rel_change']:.3e} "
+                      + (f"gap={rec['gap']:.3e}" if "gap" in rec else ""))
+            stop = False
+            for cb in cbs:
+                fn = getattr(cb, "on_epoch_end", cb)
+                stop = bool(fn(rec)) or stop
+            if rec["rel_change"] < tol:
+                converged = True
+                break
+            if stop:
+                break
+        if not history:
+            # until <= epochs_done (e.g. a loaded estimator that already
+            # used its budget): report the CURRENT state honestly rather
+            # than an empty history with a nan gap
+            history = [{"epoch": self.epochs_done, "rel_change": 0.0,
+                        "t": 0.0, "gap": self.gap()}]
+        elif "gap" not in history[-1]:
+            history[-1]["gap"] = self.gap() if not diverged else float("inf")
+        return FitResult(
+            epochs=self.epochs_done, converged=converged,
+            diverged=diverged, v=np.asarray(self.v),
+            alpha=np.asarray(self.alpha), history=history,
+            wall_time=time.perf_counter() - t0)
+
+    # -- diagnostics -------------------------------------------------------
+
+    def _streamed_primal_dual(self, gbuckets: int = 256
+                              ) -> tuple[float, float]:
+        """One streaming pass over the feed/cache: primal + dual sums."""
+        src = self.cache if self.cache is not None else self.feed
+        nb = self.bplan.n_buckets
+        B = self.bplan.bucket
+        loss_sum = conj_sum = 0.0
+        alpha = np.asarray(self.alpha)
+        v = self.v
+        for start in range(0, nb, gbuckets):
+            bids = np.arange(start, min(start + gbuckets, nb))
+            if self.cache is not None:
+                data, yb = src.gather_buckets(bids)
+            else:
+                data, yb = src.fetch(bids)
+            yb = jnp.asarray(yb)
+            m = margins(v, data)
+            loss_sum += float(jnp.sum(self.obj.loss(m, yb)))
+            a = jnp.asarray(alpha[start * B:start * B + yb.shape[0]])
+            conj_sum += float(jnp.sum(self.obj.conj_neg(a, yb)))
+        reg = 0.5 * self.lam * float(jnp.sum(v ** 2))
+        primal = loss_sum / self.n + reg
+        dual = -conj_sum / self.n - reg
+        return primal, dual
+
+    def primal(self) -> float:
+        if self.streamed:
+            return self._streamed_primal_dual()[0]
+        if self.sparse:
+            m = margins(self.v, (self.idx, self.val))
+            return float(jnp.sum(self.obj.loss(m, self.y)) / self.n
+                         + 0.5 * self.lam * jnp.sum(self.v ** 2))
+        return float(objectives.primal_value(
+            self.obj, self.v, self.X, self.y, self.lam))
+
+    def gap(self) -> float:
+        """Duality gap P(v) - D(alpha) — the convergence certificate."""
+        if self.streamed:
+            p, dv = self._streamed_primal_dual()
+            return p - dv
+        if self.sparse:
+            dval = objectives.dual_value(self.obj, self.alpha, self.v,
+                                         self.y, self.lam)
+            return self.primal() - float(dval)
+        return float(objectives.duality_gap(
+            self.obj, self.alpha, self.v, self.X, self.y, self.lam))
+
+    # -- checkpoint/restart ------------------------------------------------
+
+    def state_dict(self) -> dict[str, Any]:
+        return {"alpha": np.asarray(self.alpha), "v": np.asarray(self.v),
+                "epoch": np.int64(self.epochs_done)}
+
+    def load_state_dict(self, st: dict[str, Any]) -> None:
+        self.alpha = jnp.asarray(st["alpha"])
+        self.v = jnp.asarray(st["v"])
+        self.epochs_done = int(st["epoch"])
+
+    def save(self, path, *, meta: Optional[dict] = None) -> None:
+        """Atomic on-disk snapshot of the solver state (+ meta)."""
+        from repro.checkpoint import save_tree
+        save_tree(path, self.state_dict(),
+                  meta=dict(meta or {}, epochs_done=self.epochs_done))
+
+    def load(self, path) -> dict:
+        """Restore solver state saved by `save`; returns the meta dict."""
+        from repro.checkpoint import restore_tree
+        st, meta = restore_tree(path, self.state_dict())
+        self.load_state_dict(st)
+        return meta

@@ -86,6 +86,10 @@ def epoch_sim(
 
     Deprecated shim: forwards to `engine.sim_epoch_dense`.
     """
+    from repro.api import warn_deprecated
+    warn_deprecated("repro.core.cocoa.epoch_sim",
+                    "repro.core.engine.sim_epoch_dense (or repro.api."
+                    "Session for training loops)")
     return engine.sim_epoch_dense(obj, X, y, alpha, v, lam, plan, bplan,
                                   cfg, epoch, straggler_mask)
 
@@ -106,5 +110,9 @@ def epoch_sim_sparse(
     """Sparse-path epoch (padded CSR).  Deprecated shim over
     `engine.sim_epoch_sparse`; unlike the pre-engine driver this now
     honours `chunks` (v syncs per epoch) on the sparse path too."""
+    from repro.api import warn_deprecated
+    warn_deprecated("repro.core.cocoa.epoch_sim_sparse",
+                    "repro.core.engine.sim_epoch_sparse (or repro.api."
+                    "Session for training loops)")
     return engine.sim_epoch_sparse(obj, idx, val, y, alpha, v, lam, plan,
                                    bplan, cfg, epoch)

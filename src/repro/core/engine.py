@@ -156,14 +156,21 @@ def make_local_solver(kind: str, obj: Objective, lam_n, sig, *,
                       bucket: int = 1, sparse: bool = False,
                       model_axis: Optional[str] = None,
                       interpret: Optional[bool] = None) -> LocalSolver:
-    """Resolve an `AlgoConfig.local_solver` name to a LocalSolver."""
+    """Resolve an `AlgoConfig.local_solver` name to a LocalSolver.
+
+    "auto" resolves to "xla" on BOTH paths (the sparse Pallas kernel
+    does not exist yet — ROADMAP); only an EXPLICIT "pallas" on the
+    sparse path is an error, and unknown kinds are rejected everywhere.
+    """
+    if kind == "auto":
+        kind = "xla"
     if sparse:
         if kind == "pallas":
             raise ValueError("the Pallas bucket kernel is dense-only; "
                              "sparse workloads use the gather/scatter path")
+        if kind != "xla":
+            raise ValueError(f"unknown local_solver {kind!r}")
         return sparse_solver(obj, lam_n, sig)
-    if kind == "auto":
-        kind = "xla"
     if kind == "pallas":
         if model_axis is not None:
             raise ValueError("local_solver='pallas' does not support "

@@ -1,43 +1,31 @@
-"""GLM training drivers: epochs, convergence detection, metrics,
-checkpoint/restart — for in-memory arrays AND out-of-core caches.
+"""Legacy GLM training drivers — deprecation shims over `repro.api`.
 
-Convergence is declared the way the paper does it: when the relative
-change of the learned model between consecutive epochs drops below a
-threshold.  The duality gap (a certificate, not available to the paper's
-stopping rule) is also tracked for tests and benchmarks.
+The drivers that used to live here (`GLMTrainer` for resident arrays,
+`StreamedGLMTrainer` for out-of-core caches, `fit_dataset` for registry
+names) are now thin facades over ONE owner of solver state:
+`repro.api.Session` (DESIGN.md S10).  Each shim keeps its exact legacy
+constructor/`fit` signature and attributes (`alpha`, `v`, `epoch`,
+`plan`, `bplan`, `_epoch_fn`, `gap()`, `primal()`, `state_dict()`), so
+existing code and tests keep passing, and emits a
+`ReproDeprecationWarning` pointing at the replacement.
 
-Two drivers share one fit loop (`_TrainerBase`):
+New code should use `repro.api` directly:
 
-  * `GLMTrainer`     — device-resident arrays, whole-epoch jit (the
-                       simulator path every benchmark uses);
-  * `StreamedGLMTrainer` — examples live in a `repro.data.cache`
-                       bucket-tile cache and stream through the
-                       engine's `ChunkFeed` loop, so n can exceed
-                       device memory.  With `deterministic=True` the
-                       two are bitwise-identical on the same data
-                       (pinned by tests/test_pipeline.py).
-
-`fit_dataset` is the one-call entry point: registry name -> cache ->
-trainer -> `FitResult`.
+    Session((X, y), ...)          instead of  GLMTrainer(X, y, ...)
+    Session(cache, streamed=True) instead of  StreamedGLMTrainer(cache)
+    Session("higgs").fit(...)     instead of  fit_dataset("higgs")
+    api.LogisticRegression(...)   for the sklearn-shaped front door
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from . import engine, objectives
-from .bucketing import BucketPlan, make_plan
 from .cocoa import SolverConfig
-from .config import EngineConfig, as_engine_config
-from .objectives import Objective, get_objective
-from .partition import PartitionPlan
-
-Array = jax.Array
+from .config import EngineConfig
+from .objectives import Objective
 
 
 @dataclasses.dataclass
@@ -56,219 +44,96 @@ class FitResult:
 
 
 class _TrainerBase:
-    """The shared fit loop.  Subclasses provide `_epoch_fn(alpha, v,
-    epoch)`, `gap()`, and the `alpha`/`v`/`epoch` state fields."""
+    """Shared shim plumbing: every attribute the legacy trainers exposed
+    resolves against the wrapped `repro.api.Session`."""
 
-    obj: Objective
-    lam: float
-    alpha: Array
-    v: Array
-    epoch: int
+    _session: Any
 
-    def gap(self) -> float:
-        raise NotImplementedError
+    # legacy state fields, proxied so reads AND writes hit the session
+    @property
+    def alpha(self):
+        return self._session.alpha
+
+    @alpha.setter
+    def alpha(self, value):
+        self._session.alpha = value
+
+    @property
+    def v(self):
+        return self._session.v
+
+    @v.setter
+    def v(self, value):
+        self._session.v = value
+
+    @property
+    def epoch(self) -> int:
+        return self._session.epochs_done
+
+    @epoch.setter
+    def epoch(self, value: int):
+        self._session.epochs_done = int(value)
+
+    def __getattr__(self, name):
+        # anything else (obj, lam, plan, bplan, spec, cfg, X, y, idx,
+        # val, n, d, sparse, cache, feed, _epoch_fn, ...) lives on the
+        # session; __getattr__ only fires when normal lookup misses.
+        if name == "_session":
+            raise AttributeError(name)
+        return getattr(self._session, name)
 
     def fit(self, max_epochs: int = 100, tol: float = 1e-3,
             gap_every: int = 0, verbose: bool = False,
             diverge_above: float = 1e8) -> FitResult:
-        history: list[dict[str, float]] = []
-        t0 = time.perf_counter()
-        converged = diverged = False
-        for _ in range(max_epochs):
-            v_prev = self.v
-            self.alpha, self.v = self._epoch_fn(
-                self.alpha, self.v, jnp.int32(self.epoch))
-            self.epoch += 1
-            rel = float(jnp.linalg.norm(self.v - v_prev)
-                        / jnp.maximum(jnp.linalg.norm(self.v), 1e-30))
-            rec = {"epoch": self.epoch, "rel_change": rel,
-                   "t": time.perf_counter() - t0}
-            if gap_every and self.epoch % gap_every == 0:
-                rec["gap"] = self.gap()
-            history.append(rec)
-            if verbose:
-                print(f"epoch {self.epoch:4d} rel={rel:.3e} "
-                      + (f"gap={rec['gap']:.3e}" if "gap" in rec else ""))
-            vmax = float(jnp.max(jnp.abs(self.v)))
-            if not np.isfinite(vmax) or vmax > diverge_above:
-                diverged = True
-                break
-            if rel < tol:
-                converged = True
-                break
-        if history and "gap" not in history[-1]:
-            history[-1]["gap"] = self.gap() if not diverged else float("inf")
-        return FitResult(
-            epochs=self.epoch, converged=converged, diverged=diverged,
-            v=np.asarray(self.v), alpha=np.asarray(self.alpha),
-            history=history, wall_time=time.perf_counter() - t0)
+        return self._session.fit(
+            max_epochs=max_epochs, tol=tol, gap_every=gap_every,
+            verbose=verbose, diverge_above=diverge_above)
+
+    def gap(self) -> float:
+        return self._session.gap()
+
+    def primal(self) -> float:
+        return self._session.primal()
 
     # -- checkpoint/restart ------------------------------------------------
     def state_dict(self) -> dict[str, Any]:
-        return {"alpha": np.asarray(self.alpha), "v": np.asarray(self.v),
-                "epoch": np.int64(self.epoch)}
+        return self._session.state_dict()
 
     def load_state_dict(self, st: dict[str, Any]) -> None:
-        self.alpha = jnp.asarray(st["alpha"])
-        self.v = jnp.asarray(st["v"])
-        self.epoch = int(st["epoch"])
+        self._session.load_state_dict(st)
 
 
 class GLMTrainer(_TrainerBase):
-    """Paper's solver: bucketed, dynamically partitioned, hierarchical SDCA.
-
-    dense:  X (d, n);  sparse: (idx, val) padded CSR, plus d.
-    """
+    """Deprecated: use `repro.api.Session((X, y), ...)` (or an
+    `repro.api` estimator).  dense: X (d, n); sparse: (idx, val) padded
+    CSR plus d."""
 
     def __init__(self, X, y, *, objective: str | Objective = "logistic",
                  lam: float = 1e-3,
                  cfg: SolverConfig | EngineConfig = SolverConfig(),
                  sparse: bool = False, d: Optional[int] = None,
                  bucket_force: Optional[int] = None):
-        self.obj = (objective if isinstance(objective, Objective)
-                    else get_objective(objective))
-        self.lam = float(lam)
-        self.cfg = cfg
-        self.spec = as_engine_config(cfg)
-        self.sparse = sparse
-        if sparse:
-            idx, val = X
-            self.idx = jnp.asarray(idx, jnp.int32)
-            self.val = jnp.asarray(val, jnp.float32)
-            self.n = self.val.shape[0]
-            self.d = int(d)
-        else:
-            self.X = jnp.asarray(X)
-            self.d, self.n = self.X.shape
-        self.y = jnp.asarray(y)
-
-        algo, dep = self.spec.algo, self.spec.deployment
-        force = bucket_force if bucket_force is not None else algo.bucket
-        self.bplan = make_plan(self.n, self.d, force=force or 1)
-        if self.bplan.bucket != algo.bucket:
-            # run_epoch chunks columns by algo.bucket while the gather/
-            # solver use the plan's bucket — keep the single source of
-            # truth (bucket_force / the plan heuristic) authoritative.
-            algo = dataclasses.replace(algo, bucket=self.bplan.bucket)
-            self.spec = dataclasses.replace(self.spec, algo=algo)
-        self.plan = PartitionPlan(
-            n_buckets=self.bplan.n_buckets, pods=dep.pods, lanes=dep.lanes,
-            mode=algo.partition, seed=algo.seed,
-            redeal_frac=algo.redeal_frac)
-
-        self.alpha = jnp.zeros(self.n, jnp.float32)
-        self.v = jnp.zeros(self.d, jnp.float32)
-        self.epoch = 0
-
-        if sparse:
-            self._epoch_fn = jax.jit(
-                lambda a, v, e: engine.sim_epoch_sparse(
-                    self.obj, self.idx, self.val, self.y, a, v, self.lam,
-                    self.plan, self.bplan, self.spec, e))
-        else:
-            self._epoch_fn = jax.jit(
-                lambda a, v, e: engine.sim_epoch_dense(
-                    self.obj, self.X, self.y, a, v, self.lam,
-                    self.plan, self.bplan, self.spec, e))
-
-    # -- diagnostics ------------------------------------------------------
-    def gap(self) -> float:
-        if self.sparse:
-            m = jnp.sum(self.v[self.idx] * self.val, axis=1)
-            n = self.n
-            p = (jnp.sum(self.obj.loss(m, self.y)) / n
-                 + 0.5 * self.lam * jnp.sum(self.v ** 2))
-            dval = objectives.dual_value(self.obj, self.alpha, self.v,
-                                         self.y, self.lam)
-            return float(p - dval)
-        return float(objectives.duality_gap(
-            self.obj, self.alpha, self.v, self.X, self.y, self.lam))
-
-    def primal(self) -> float:
-        if self.sparse:
-            m = jnp.sum(self.v[self.idx] * self.val, axis=1)
-            return float(jnp.sum(self.obj.loss(m, self.y)) / self.n
-                         + 0.5 * self.lam * jnp.sum(self.v ** 2))
-        return float(objectives.primal_value(
-            self.obj, self.v, self.X, self.y, self.lam))
+        from repro.api import Session, warn_deprecated
+        warn_deprecated("repro.core.GLMTrainer",
+                        "repro.api.Session (or an repro.api estimator)")
+        data = tuple(X) if sparse else X
+        self._session = Session(data, y, objective=objective, lam=lam,
+                                cfg=cfg, d=d, bucket=bucket_force,
+                                pad=False)
 
 
 class StreamedGLMTrainer(_TrainerBase):
-    """Out-of-core twin of `GLMTrainer` over a bucket-tile cache.
-
-    Only alpha (n,) and v (d,) live on device between chunks; X/y
-    stream through the cache's `TileFeed` one chunk at a time with
-    double-buffered host->device transfer, so datasets larger than
-    device memory train at full algorithmic fidelity (same schedule,
-    same solver, same sigma').
-    """
+    """Deprecated: use `repro.api.Session(cache, streamed=True)`."""
 
     def __init__(self, cache, *, objective: str | Objective | None = None,
                  lam: float = 1e-3,
                  cfg: SolverConfig | EngineConfig = SolverConfig(),
                  jit_step: bool = True):
-        meta = cache.meta
-        objective = objective or meta.objective
-        self.obj = (objective if isinstance(objective, Objective)
-                    else get_objective(objective))
-        self.lam = float(lam)
-        self.cfg = cfg
-        self.spec = as_engine_config(cfg)
-        self.cache = cache
-        self.sparse = meta.kind == "sparse"
-        self.n, self.d = meta.n, meta.d
-
-        algo, dep = self.spec.algo, self.spec.deployment
-        if algo.bucket not in (0, 1, meta.bucket):
-            raise ValueError(
-                f"cfg bucket={algo.bucket} != cache bucket={meta.bucket}; "
-                f"rebuild the cache at the training bucket size")
-        self.bplan = BucketPlan(n=self.n, bucket=meta.bucket,
-                                n_buckets=meta.n_buckets)
-        self.plan = PartitionPlan(
-            n_buckets=meta.n_buckets, pods=dep.pods, lanes=dep.lanes,
-            mode=algo.partition, seed=algo.seed,
-            redeal_frac=algo.redeal_frac)
-        self.feed = cache.feed()
-
-        self.alpha = jnp.zeros(self.n, jnp.float32)
-        self.v = jnp.zeros(self.d, jnp.float32)
-        self.epoch = 0
-        self._epoch_fn = engine.make_streamed_epoch(
-            self.obj, self.spec, self.plan, self.feed, lam=self.lam,
-            jit_step=jit_step)
-
-    # -- diagnostics (streamed over the cache) ----------------------------
-    def _primal_dual(self, gbuckets: int = 256) -> tuple[float, float]:
-        """One streaming pass: primal loss sum + dual conjugate sum."""
-        nb = self.cache.meta.n_buckets
-        B = self.cache.meta.bucket
-        loss_sum = conj_sum = 0.0
-        alpha = np.asarray(self.alpha)
-        v = self.v
-        for start in range(0, nb, gbuckets):
-            bids = np.arange(start, min(start + gbuckets, nb))
-            data, y = self.cache.gather_buckets(bids)
-            if self.sparse:
-                idx, val = data
-                m = jnp.sum(v[jnp.asarray(idx)] * jnp.asarray(val), axis=1)
-            else:
-                m = jnp.asarray(data).T @ v
-            y = jnp.asarray(y)
-            loss_sum += float(jnp.sum(self.obj.loss(m, y)))
-            a = jnp.asarray(alpha[start * B:start * B + y.shape[0]])
-            conj_sum += float(jnp.sum(self.obj.conj_neg(a, y)))
-        reg = 0.5 * self.lam * float(jnp.sum(v ** 2))
-        primal = loss_sum / self.n + reg
-        dual = -conj_sum / self.n - reg
-        return primal, dual
-
-    def primal(self) -> float:
-        return self._primal_dual()[0]
-
-    def gap(self) -> float:
-        p, dv = self._primal_dual()
-        return p - dv
+        from repro.api import Session, warn_deprecated
+        warn_deprecated("repro.core.StreamedGLMTrainer",
+                        "repro.api.Session(cache, streamed=True)")
+        self._session = Session(cache, objective=objective, lam=lam,
+                                cfg=cfg, streamed=True, jit_step=jit_step)
 
 
 def fit_dataset(name: str, *,
@@ -281,56 +146,19 @@ def fit_dataset(name: str, *,
                 max_epochs: int = 100, tol: float = 1e-3,
                 gap_every: int = 0, verbose: bool = False,
                 return_trainer: bool = False):
-    """Train on a registry dataset end to end: name -> (cache) -> fit.
+    """Deprecated: use `repro.api.Session(name, ...).fit(...)`.
 
-    * ``streamed=False`` loads the dataset (through the tile cache when
-      ``cache_dir`` is set, else directly) and runs `GLMTrainer`;
-    * ``streamed=True`` builds/opens the bucket-tile cache and runs
-      `StreamedGLMTrainer` out of core.
-
-    The cache is padded so every partition mode divides the chosen
-    (pods, lanes, chunks, bucket) topology; with
-    ``deterministic=True`` the two modes produce bitwise-identical
-    models on the same cache.
+    Train on a registry dataset end to end: name -> (cache) -> fit.
+    With ``return_trainer=True`` the second element is now the
+    underlying `Session` (it exposes everything the old trainer did:
+    `gap()`, `primal()`, `alpha`, `v`, `plan`, ...).
     """
-    from repro.data import registry
-
-    spec = registry.get_spec(name)
-    ecfg = as_engine_config(cfg) if cfg is not None else EngineConfig()
-    algo, dep = ecfg.algo, ecfg.deployment
-    objective = objective or spec.objective
-    lam = spec.lam if lam is None else lam
-    B = bucket or max(algo.bucket, 1)
-    use_cache = streamed or cache_dir is not None
-
-    if use_cache:
-        # every partition mode divides: pods*lanes*lanes*chunks buckets
-        mult = dep.pods * dep.lanes * dep.lanes * algo.chunks * B
-        cache = registry.materialize(
-            name, cache_dir, bucket=B, pods=dep.pods, n=n, d=d,
-            pad_multiple=mult, data_dir=data_dir)
-        if streamed:
-            tr = StreamedGLMTrainer(cache, objective=objective, lam=lam,
-                                    cfg=ecfg)
-        else:
-            arrays, y = cache.load_arrays()
-            if cache.meta.kind == "sparse":
-                tr = GLMTrainer(arrays, y, objective=objective, lam=lam,
-                                cfg=ecfg, sparse=True, d=cache.meta.d,
-                                bucket_force=cache.meta.bucket)
-            else:
-                tr = GLMTrainer(arrays, y, objective=objective, lam=lam,
-                                cfg=ecfg, bucket_force=cache.meta.bucket)
-    else:
-        ds = registry.get_dataset(name, n=n, d=d, data_dir=data_dir)
-        if ds.sparse:
-            tr = GLMTrainer((ds.idx, ds.val), ds.y, objective=objective,
-                            lam=lam, cfg=ecfg, sparse=True, d=ds.d,
-                            bucket_force=B)
-        else:
-            tr = GLMTrainer(ds.X, ds.y, objective=objective, lam=lam,
-                            cfg=ecfg, bucket_force=B)
-
-    res = tr.fit(max_epochs=max_epochs, tol=tol, gap_every=gap_every,
-                 verbose=verbose)
-    return (res, tr) if return_trainer else res
+    from repro.api import Session, warn_deprecated
+    warn_deprecated("repro.core.fit_dataset",
+                    "repro.api.Session(name, ...).fit(...)")
+    session = Session(name, objective=objective, lam=lam, cfg=cfg,
+                      n=n, d=d, streamed=streamed, cache_dir=cache_dir,
+                      data_dir=data_dir, bucket=bucket)
+    res = session.fit(max_epochs=max_epochs, tol=tol,
+                      gap_every=gap_every, verbose=verbose)
+    return (res, session) if return_trainer else res

@@ -75,6 +75,11 @@ class GLMScale:
     redeal_frac: float = 1.0      # bucket fraction re-dealt per epoch
     local_solver: str = "auto"    # auto|xla|pallas (engine LocalSolver)
     deterministic: bool = False   # ordered gather-sums (bit-stable)
+    # the mesh backend supports the two PHYSICAL partition modes:
+    # "alltoall" (the TPU-native dynamic re-deal) and "static"
+    partition: str = "alltoall"
+    aggregation: str = "adding"   # CoCoA(+) sigma' rule
+    seed: int = 0                 # schedule/re-deal PRNG root
 
     def engine_config(self, mesh=None) -> EngineConfig:
         """The layered engine view of this workload's solver knobs."""
@@ -87,10 +92,12 @@ class GLMScale:
             deterministic=self.deterministic)
         return EngineConfig(
             algo=AlgoConfig(bucket=self.bucket, chunks=self.chunks,
-                            aggregation="adding", partition="alltoall",
+                            aggregation=self.aggregation,
+                            partition=self.partition,
                             redeal_frac=self.redeal_frac,
                             local_solver=self.local_solver,
-                            compress_sync=self.compress_sync, seed=0),
+                            compress_sync=self.compress_sync,
+                            seed=self.seed),
             deployment=dep)
 
 
@@ -136,6 +143,73 @@ def scale_for_dataset(name: str, **overrides) -> GLMScale:
         kw["feature_shard"] = spec.full_d >= 512
     kw.update(overrides)
     return GLMScale(**kw)
+
+
+def scale_for_estimator(est, **overrides) -> GLMScale:
+    """A FITTED `repro.api` estimator (or bare `Session`) -> `GLMScale`.
+
+    The deployment-scale view is derived from the estimator's own
+    solver state: data dims from its session, algorithm knobs from its
+    `EngineConfig` — so the mesh program it lowers to runs the *same*
+    epoch the estimator ran in the simulator."""
+    ses = getattr(est, "session_", est)
+    if not hasattr(ses, "spec") or not hasattr(ses, "n"):
+        raise ValueError(
+            "estimator_epoch needs a fitted estimator (or a Session): "
+            "the mesh program is sized from its data and config")
+    algo, dep = ses.spec.algo, ses.spec.deployment
+    kind = "sparse" if ses.sparse else "dense"
+    kw = dict(name=f"glm-{type(est).__name__.lower()}", kind=kind,
+              n=ses.n, d=ses.d, bucket=ses.bplan.bucket,
+              chunks=algo.chunks, lam=ses.lam,
+              compress_pod=dep.compress_pod,
+              compress_sync=algo.compress_sync,
+              redeal_frac=algo.redeal_frac,
+              local_solver=algo.local_solver,
+              deterministic=dep.deterministic,
+              # the mesh has two physical partition modes; every sim
+              # re-dealing scheme maps onto the all-to-all re-deal
+              partition=("static" if algo.partition == "static"
+                         else "alltoall"),
+              aggregation=algo.aggregation, seed=algo.seed)
+    if kind == "sparse":
+        if ses.cache is not None:
+            kw["nnz"] = ses.cache.meta.nnz
+        elif hasattr(ses, "idx"):
+            kw["nnz"] = int(ses.idx.shape[1])
+        elif "nnz" not in overrides:
+            raise ValueError("sparse feed-backed session: pass nnz=...")
+    else:
+        kw["feature_shard"] = dep.feature_shard
+    kw.update(overrides)
+    return GLMScale(**kw)
+
+
+def estimator_epoch(est, mesh, **overrides):
+    """Lower an `repro.api` estimator onto a device mesh.
+
+    Returns ``(epoch_fn, scale)``: `epoch_fn` is the shard_map'd epoch
+    program over global arrays (same signature as `make_dense_epoch` /
+    `make_sparse_epoch` products; jit/donate and feed it
+    `glm_input_specs(scale, mesh)`-shaped arrays), `scale` the derived
+    `GLMScale`.  The estimator's algorithm knobs (bucket, chunks,
+    aggregation, seed, compression, determinism) carry over verbatim;
+    its partition scheme maps onto the mesh's physical modes ("static"
+    stays static, every re-dealing scheme becomes the TPU-native
+    all-to-all re-deal).  With `deterministic=True` and a
+    static/alltoall-partition estimator, the mesh program is
+    bitwise-identical to the engine's stacked-sim epochs on P pods x K
+    data-lane layouts (the S2 sim<->mesh contract); other sim schedule
+    modes are convergence-equivalent, not bitwise.
+    """
+    from repro.core.objectives import get_objective
+
+    scale = scale_for_estimator(est, **overrides)
+    objective = getattr(est, "_objective", None)
+    obj = get_objective(objective) if objective else getattr(
+        getattr(est, "session_", est), "obj", LOGISTIC)
+    make = make_sparse_epoch if scale.kind == "sparse" else make_dense_epoch
+    return make(scale, mesh, obj=obj), scale
 
 
 def _axes(mesh, scale: GLMScale):

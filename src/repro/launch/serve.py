@@ -1,10 +1,16 @@
-"""Batched serving driver: prefill a prompt batch, decode greedily.
+"""Batched serving drivers: LM decode AND GLM batch prediction.
+
+LM path (prefill a prompt batch, decode greedily):
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
         --smoke --batch 4 --prompt-len 32 --gen 16
 
-Exercises the prefill -> decode cache hand-off used by the decode_32k /
-long_500k dry-run cells, at CPU scale.
+GLM path (batch predict through an `repro.api` estimator — dense or
+CSR, in-memory or streamed from the bucket-tile cache for out-of-core
+inference):
+
+    PYTHONPATH=src python -m repro.launch.serve --glm higgs \
+        --glm-epochs 10 --glm-batch 4096
 """
 from __future__ import annotations
 
@@ -18,6 +24,96 @@ import numpy as np
 from repro.configs import get_config, get_smoke, list_archs
 from repro.launch import steps as steps_lib
 from repro.models import lm
+
+
+# ---------------------------------------------------------------------------
+# GLM batch prediction (DESIGN.md S10: the estimator IS the serving unit)
+# ---------------------------------------------------------------------------
+
+
+def glm_predict_batch(est, X, *, batch: int = 8192,
+                      proba: bool = False) -> np.ndarray:
+    """Predict in fixed-size batches through a fitted estimator.
+
+    ``X`` is sklearn-layout dense ``(n, d)``, a scipy sparse matrix, or
+    an engine padded-CSR ``(idx, val)`` pair.  Batching bounds peak
+    device memory at `batch` rows regardless of request size — the
+    serving analogue of the trainer's chunked epochs.
+    """
+    pair = isinstance(X, (tuple, list))
+    n = X[0].shape[0] if pair else X.shape[0]
+    fn = est.predict_proba if proba else est.predict
+    outs = []
+    for s in range(0, n, batch):
+        sl = ((X[0][s:s + batch], X[1][s:s + batch]) if pair
+              else X[s:s + batch])
+        outs.append(np.asarray(fn(sl)))
+    return np.concatenate(outs) if outs else np.empty((0,))
+
+
+def glm_predict_streamed(est, cache, *, gbuckets: int = 512,
+                         return_margins: bool = False) -> np.ndarray:
+    """Out-of-core inference: stream bucket tiles straight off the
+    mmap'd cache, never holding more than `gbuckets` tiles in memory.
+
+    Returns predictions (or raw margins) for the TRUE examples — the
+    cache's inert padding rows are trimmed via ``meta.n_examples``.
+    """
+    from repro.api import margins as _margins
+
+    est._check_fitted()
+    m = cache.meta
+    out = []
+    for start in range(0, m.n_buckets, gbuckets):
+        bids = np.arange(start, min(start + gbuckets, m.n_buckets))
+        data, _y = cache.gather_buckets(bids)
+        data = tuple(data) if m.kind == "sparse" else data
+        out.append(np.asarray(_margins(est.coef_, data)))
+    mg = np.concatenate(out)[:m.n_examples]
+    if return_margins or not getattr(est, "_classifier", False):
+        return mg
+    return np.asarray(est.classes_)[(mg > 0).astype(int)]
+
+
+def serve_glm(dataset: str, *, ckpt=None, epochs: int = 10,
+              batch: int = 8192, cache_dir=None, bucket: int = 8,
+              verbose: bool = True):
+    """Registry dataset -> (load or fit) estimator -> streamed predict.
+
+    The one-command GLM serving demo: materializes the bucket-tile
+    cache, restores an `est.save` checkpoint when given (else runs a
+    quick fit), then serves the whole dataset out of core and reports
+    throughput + training-set accuracy.
+    """
+    from repro.api import LogisticRegression, load as load_estimator
+    from repro.api.session import _pad_multiple
+    from repro.data import registry
+
+    if ckpt is not None:
+        est = load_estimator(ckpt)
+    else:
+        est = LogisticRegression(max_epochs=epochs, bucket=bucket,
+                                 lanes=4, partition="dynamic")
+    # pad to the estimator's training topology so est.fit(cache) divides
+    # for any raw-file n (the cache path cannot re-pad)
+    cache = registry.materialize(
+        dataset, cache_dir, bucket=est.bucket,
+        pad_multiple=_pad_multiple(est.engine_config(), est.bucket))
+    if ckpt is None:
+        est.fit(cache)
+    t0 = time.perf_counter()
+    preds = glm_predict_streamed(est, cache, gbuckets=max(batch // bucket,
+                                                          1))
+    dt = time.perf_counter() - t0
+    y = np.ascontiguousarray(
+        cache.arrays["y"]).reshape(-1)[:cache.meta.n_examples]
+    labels = np.asarray(est.classes_)[(y > 0).astype(int)]
+    acc = float(np.mean(preds == labels))
+    if verbose:
+        print(f"glm-serve {dataset}: {preds.shape[0]} rows in {dt:.3f}s "
+              f"({preds.shape[0] / max(dt, 1e-9):,.0f} rows/s), "
+              f"train-acc {acc:.4f}")
+    return preds, acc
 
 
 def serve(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
@@ -88,7 +184,21 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--glm", default=None, metavar="DATASET",
+                    help="serve GLM predictions for a registry dataset "
+                         "(streamed from the tile cache) instead of the "
+                         "LM decode path")
+    ap.add_argument("--glm-ckpt", default=None,
+                    help="estimator checkpoint dir (from est.save); "
+                         "without it a quick fit runs first")
+    ap.add_argument("--glm-epochs", type=int, default=10)
+    ap.add_argument("--glm-batch", type=int, default=8192)
+    ap.add_argument("--glm-cache-dir", default=None)
     args = ap.parse_args()
+    if args.glm:
+        serve_glm(args.glm, ckpt=args.glm_ckpt, epochs=args.glm_epochs,
+                  batch=args.glm_batch, cache_dir=args.glm_cache_dir)
+        return
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     toks = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
                  gen=args.gen)
