@@ -1,7 +1,7 @@
 """Diff two bench-summary JSONs and fail on perf regressions.
 
     python -m benchmarks.compare PREV.json NEW.json \
-        [--runtime-tol 0.2] [--gap-tol 0.2]
+        [--runtime-tol 0.2] [--gap-tol 0.2] [--parity-floor 0.99]
 
 CI's `bench-smoke` job downloads the previous run's `BENCH_*.json`
 artifact and runs this against the fresh one (the ROADMAP
@@ -9,6 +9,13 @@ artifact and runs this against the fresh one (the ROADMAP
 final duality gap got >20% worse, when a previously-passing figure now
 fails, or when a figure disappeared.  A missing/unreadable PREV (first
 run, expired artifact) is a clean pass — there is nothing to diff.
+
+The fig3/fig6 sklearn-parity metrics ride in each summary's
+`figures[*].parity` records and are part of the gate: any
+`predict_agree` below the floor (default 0.99) fails the NEW run even
+on a first run with no baseline, and a parity record that existed in
+PREV but vanished from NEW is a regression (a silently-dropped parity
+arm must not pass).
 
 Quick-mode and full-mode summaries are never compared against each
 other (sizes differ by design; the `quick` flag is checked first).
@@ -31,6 +38,28 @@ def _load(path) -> dict | None:
         return None
     return doc if doc.get("schema", "").startswith("bench-summary") \
         else None
+
+
+def _parity_key(rec: dict) -> tuple:
+    return (rec.get("dataset"), rec.get("impl"), rec.get("solver"))
+
+
+def parity_floor_problems(summary: dict, *, floor: float = 0.99
+                          ) -> list[str]:
+    """Absolute sklearn-parity gate on ONE summary (no baseline needed):
+    every fig3/fig6 parity record must have predict_agree >= floor."""
+    problems: list[str] = []
+    for name, fig in summary.get("figures", {}).items():
+        if fig.get("failed"):
+            continue              # the figure failure already fails CI
+        for rec in fig.get("parity", []):
+            agree = rec.get("predict_agree")
+            if agree is not None and agree < floor:
+                problems.append(
+                    f"{name}: sklearn parity predict_agree={agree:.4f} "
+                    f"below the {floor:.2f} floor "
+                    f"({rec.get('dataset')}/{rec.get('solver') or rec.get('impl')})")
+    return problems
 
 
 def compare(prev: dict, new: dict, *, runtime_tol: float = 0.2,
@@ -64,6 +93,15 @@ def compare(prev: dict, new: dict, *, runtime_tol: float = 0.2,
                 f"{name}: final gap {g_n:.3e} vs {g_p:.3e} "
                 f"(worse by {(g_n / g_p - 1) * 100:.0f}% > "
                 f"{gap_tol * 100:.0f}% budget)")
+        # parity trajectory: a record tracked last run must still exist
+        # (its VALUE is gated by the absolute floor, not a relative diff
+        # — agreement is already a ratio, and the floor is the contract)
+        new_keys = {_parity_key(r) for r in n.get("parity", [])}
+        for rec in p.get("parity", []):
+            if _parity_key(rec) not in new_keys:
+                problems.append(
+                    f"{name}: sklearn-parity record "
+                    f"{_parity_key(rec)} disappeared from the run")
     return problems
 
 
@@ -73,25 +111,28 @@ def main(argv=None) -> int:
     ap.add_argument("new")
     ap.add_argument("--runtime-tol", type=float, default=0.2)
     ap.add_argument("--gap-tol", type=float, default=0.2)
+    ap.add_argument("--parity-floor", type=float, default=0.99)
     args = ap.parse_args(argv)
 
     new = _load(args.new)
     if new is None:
         print(f"compare: cannot read new summary {args.new}")
         return 1
+    # the absolute parity floor gates every run, baseline or not
+    problems = parity_floor_problems(new, floor=args.parity_floor)
     prev = _load(args.prev)
     if prev is None:
         print(f"compare: no previous summary at {args.prev}; "
               "baseline accepted")
-        return 0
-    problems = compare(prev, new, runtime_tol=args.runtime_tol,
-                       gap_tol=args.gap_tol)
+    else:
+        problems += compare(prev, new, runtime_tol=args.runtime_tol,
+                            gap_tol=args.gap_tol)
     if problems:
-        print("perf regressions vs previous run:")
+        print("perf/parity regressions:")
         for p in problems:
             print(f"  - {p}")
         return 1
-    print("compare: no perf regressions vs previous run")
+    print("compare: no perf or parity regressions")
     return 0
 
 

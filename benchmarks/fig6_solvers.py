@@ -11,6 +11,14 @@ solver behind the sklearn protocol), timed end-to-end like a user
 would call it; its parity columns (train-score agreement with sklearn,
 prediction agreement) are what CI uploads as the sklearn-parity
 metrics.
+
+The sparse arms (`sdca_sparse_xla` vs `sdca_sparse_pallas`, criteo-
+shaped data) race the engine's two sparse local solvers head-to-head
+at a FIXED epoch budget and emit per-solver throughput — examples/s
+and a bytes-from-HBM-per-epoch model (the quantity the VMEM-resident
+kernel exists to cut; DESIGN.md S11) — into the BENCH json.  On CPU
+the Pallas arm runs in interpret mode, so treat its wall clock as a
+smoke signal; the HBM-bytes column is the architecture-level claim.
 """
 from __future__ import annotations
 
@@ -19,21 +27,79 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import LogisticRegression as ReproLogReg
-from repro.core import SolverConfig
+from repro.api import LogisticRegression as ReproLogReg, Session
+from repro.api.session import margins
+from repro.core import EngineConfig, SolverConfig
 from repro.core.objectives import LOGISTIC
 from repro.optim.lbfgs import glm_objective, gradient_descent, lbfgs
 
 from .common import emit, load, make_session, parity_metrics, sklearn_logreg
 
 HEADER = ["bench", "dataset", "solver", "wall_s", "primal", "test_loss",
-          "speedup_vs_lbfgs", "score", "score_sklearn", "predict_agree"]
+          "speedup_vs_lbfgs", "examples_per_s", "hbm_bytes_epoch",
+          "score", "score_sklearn", "predict_agree"]
 LAM = 1e-3
 
 
 def _test_loss(v, Xt, yt):
     m = Xt.T @ v
     return float(jnp.mean(LOGISTIC.loss(m, yt)))
+
+
+# -- sparse solver arms: XLA gather/scatter scan vs the Pallas kernel -------
+
+SPARSE_CHUNKS = 2
+SPARSE_LANES = 4
+SPARSE_BUCKET = 8
+
+
+def _sparse_hbm_bytes(n: int, nnz: int, d: int, solver: str) -> float:
+    """Bytes each sparse solver moves through HBM per epoch (model).
+
+    Both stream the (n, nnz) idx/val rows once (4+4 B/entry).  The XLA
+    scan's carry is the full shared vector, so every coordinate also
+    pays an nnz-wide gather + read-modify-write scatter against HBM-
+    resident v (3 x 4 B/entry).  The Pallas kernel pins v in VMEM for
+    the whole sub-epoch; v crosses HBM once per chunk sync (in + out).
+    """
+    data = n * nnz * 8
+    if solver == "pallas":
+        return float(data + SPARSE_CHUNKS * d * 4 * 2)
+    return float(data + n * nnz * 4 * 3)
+
+
+def _sparse_rows(quick: bool) -> list[dict]:
+    rows = []
+    epochs = 2 if quick else 6
+    data = load("criteo")                  # criteo-kaggle-sub subsample
+    idx, val, y = data["X"][0], data["X"][1], data["y"]
+    n, nnz = idx.shape
+    blk = SPARSE_LANES * SPARSE_LANES * SPARSE_CHUNKS * SPARSE_BUCKET
+    ntr = (int(n * 0.8) // blk) * blk
+    tr = dict(X=(idx[:ntr], val[:ntr]), y=y[:ntr], d=data["d"],
+              sparse=True)
+    te = (jnp.asarray(idx[ntr:]), jnp.asarray(val[ntr:]))
+    yte = jnp.asarray(y[ntr:])
+
+    for solver in ("xla", "pallas"):
+        cfg = EngineConfig.make(
+            lanes=SPARSE_LANES, bucket=SPARSE_BUCKET, chunks=SPARSE_CHUNKS,
+            partition="dynamic", deterministic=True, local_solver=solver)
+        ses = Session(tr["X"], tr["y"], objective="logistic", lam=LAM,
+                      cfg=cfg, d=tr["d"], pad=False)
+        ses._epoch_fn(ses.alpha, ses.v, jnp.int32(0))    # warm the jit
+        t0 = time.perf_counter()
+        ses.fit(max_epochs=epochs, tol=0.0)
+        wall = time.perf_counter() - t0
+        rows.append(dict(
+            bench="fig6", dataset="criteo-sparse",
+            solver=f"sdca_sparse_{solver}", wall_s=wall,
+            primal=ses.primal(),
+            test_loss=float(jnp.mean(LOGISTIC.loss(
+                margins(ses.v, te), yte))),
+            examples_per_s=ntr * epochs / wall,
+            hbm_bytes_epoch=_sparse_hbm_bytes(ntr, nnz, tr["d"], solver)))
+    return rows
 
 
 def run(quick: bool = False):
@@ -113,6 +179,7 @@ def run(quick: bool = False):
                              wall_s=wall, primal=primal, test_loss=tl,
                              speedup_vs_lbfgs=results["lbfgs"][0] / wall,
                              **parity.get(solver, {})))
+    rows.extend(_sparse_rows(quick))
     return emit(rows, HEADER)
 
 

@@ -23,7 +23,8 @@ from . import (fig1_wild_convergence, fig2_scaling_partitions,
 # benchmarks/compare.py only diffs runs with equal workload versions,
 # so intentional changes reset the perf baseline instead of tripping
 # the >20% regression gate.  v2: fig3/fig6 sklearn+estimator arms.
-WORKLOAD_VERSION = 2
+# v3: fig6 sparse xla-vs-pallas arms + deduped synthetic sparse rows.
+WORKLOAD_VERSION = 3
 
 BENCHES = [
     ("fig1_wild_convergence", fig1_wild_convergence),
@@ -81,6 +82,14 @@ def main(argv=None) -> int:
                   for r in rows if r.get("predict_agree") is not None]
         if parity:
             figures[name]["parity"] = parity
+        # per-solver throughput from the fig6 sparse xla/pallas arms
+        # rides along too, so CI can watch examples/s + HBM bytes drift
+        thr = [{k: r.get(k) for k in ("dataset", "solver",
+                                      "examples_per_s", "hbm_bytes_epoch")
+                if r.get(k) is not None}
+               for r in rows if r.get("examples_per_s") is not None]
+        if thr:
+            figures[name]["throughput"] = thr
         print(f"----- {name}: {len(rows)} rows in {dt:.1f}s")
 
     print(f"\nbenchmarks complete: {total} rows"

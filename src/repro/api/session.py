@@ -82,6 +82,7 @@ class Session:
                  cfg: Any = None, d: Optional[int] = None,
                  bucket: Optional[int] = None, streamed: bool = False,
                  cache_dir=None, data_dir=None, n: Optional[int] = None,
+                 nnz_multiple: Optional[int] = None,
                  pad: bool = True, jit_step: bool = True):
         self.spec = as_engine_config(cfg) if cfg is not None \
             else EngineConfig()
@@ -103,7 +104,8 @@ class Session:
             self._init_from_registry(
                 data, objective=objective, lam=lam, bucket=bucket,
                 streamed=streamed, cache_dir=cache_dir,
-                data_dir=data_dir, n=n, d=d, jit_step=jit_step)
+                data_dir=data_dir, n=n, d=d,
+                nnz_multiple=nnz_multiple, jit_step=jit_step)
         elif hasattr(data, "gather_buckets"):      # TileCache
             self._init_from_cache(data, objective=objective, lam=lam,
                                   streamed=streamed, jit_step=jit_step)
@@ -264,7 +266,7 @@ class Session:
 
     def _init_from_registry(self, name, *, objective, lam, bucket,
                             streamed, cache_dir, data_dir, n, d,
-                            jit_step) -> None:
+                            nnz_multiple=None, jit_step=True) -> None:
         from repro.data import registry
 
         spec = registry.get_spec(name)
@@ -273,10 +275,14 @@ class Session:
         algo, dep = self.spec.algo, self.spec.deployment
         B = bucket or max(algo.bucket, 1)
         if streamed or cache_dir is not None:
+            # nnz_multiple is the user-facing end of the sparse-kernel
+            # alignment contract: raw svmlight ingests with odd row
+            # widths pass nnz_multiple=8 HERE (or via fit_dataset) and
+            # the built tiles land lane-aligned (DESIGN.md S11)
             cache = registry.materialize(
                 name, cache_dir, bucket=B, pods=dep.pods, n=n, d=d,
                 pad_multiple=_pad_multiple(self.spec, B),
-                data_dir=data_dir)
+                nnz_multiple=nnz_multiple, data_dir=data_dir)
             self._init_from_cache(cache, objective=objective, lam=lam,
                                   streamed=streamed, jit_step=jit_step)
             return

@@ -46,7 +46,7 @@ class SolverConfig:
     bucket: int = 1                 # examples per bucket (1 = off)
     chunks: int = 1                 # v syncs per epoch (within pods)
     seed: int = 0
-    use_kernel: bool = False        # route dense buckets through Pallas
+    use_kernel: bool = False        # route buckets through Pallas kernels
     compress_sync: bool = False     # int8-quantize dv before the sync
     redeal_frac: float = 1.0        # alltoall: bucket fraction exchanged
 

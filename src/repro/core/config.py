@@ -24,9 +24,10 @@ from typing import Literal
 
 Aggregation = Literal["wild", "adding", "averaging"]
 
-#: dense local-solver implementations the engine can dispatch to.
-#: "auto" resolves to "xla" today (the Pallas path stays opt-in until
-#: it is profiled at scale on real TPUs).
+#: local-solver implementations the engine can dispatch to, on BOTH the
+#: dense and sparse paths.  "auto" resolves to "pallas" on TPU backends
+#: and "xla" elsewhere ($REPRO_LOCAL_SOLVER overrides either way — see
+#: engine.resolve_auto_solver).
 LocalSolverKind = Literal["auto", "xla", "pallas"]
 
 

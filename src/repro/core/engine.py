@@ -18,8 +18,12 @@ parametrized by two seams:
         (used from inside shard_map by `launch/glm.py`).
   * `LocalSolver` — how one worker solves its chunk: dense XLA
     (`sdca.dense_local_subepoch`), dense Pallas
-    (`kernels.ops.sdca_bucket_subepoch` — now reachable from the
-    distributed path too), or sparse (`sdca.sparse_local_subepoch`).
+    (`kernels.ops.sdca_bucket_subepoch`), sparse XLA
+    (`sdca.sparse_local_subepoch`), or sparse Pallas
+    (`kernels.ops.sdca_sparse_bucket_subepoch` — the VMEM-resident
+    shared-vector kernel over cached CSR tiles, DESIGN.md S11).
+    "auto" picks Pallas on TPU backends and XLA elsewhere; the
+    `$REPRO_LOCAL_SOLVER` env var overrides either way.
 
 Bit-determinism: with `DeploymentConfig.deterministic=True` both
 backends run each worker's sub-epoch UNBATCHED (lax.map in the sim;
@@ -46,6 +50,7 @@ with `lane` counted data-major over the example-parallel axes.
 from __future__ import annotations
 
 import dataclasses
+import os
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Mapping, Optional, Protocol, Union
 
@@ -133,13 +138,15 @@ def dense_xla_solver(obj: Objective, lam_n, sig, bucket: int,
 
 
 def dense_pallas_solver(obj: Objective, lam_n, sig, bucket: int,
-                        interpret: Optional[bool] = None) -> LocalSolver:
+                        interpret: Optional[bool] = None,
+                        source: str = "ad-hoc arrays") -> LocalSolver:
     from repro.kernels import ops as kops
 
     def solve(X, y, a, v):
         return kops.sdca_bucket_subepoch(
             obj, X, y, a, v, jnp.asarray(lam_n, X.dtype),
-            jnp.asarray(sig, X.dtype), bucket=bucket, interpret=interpret)
+            jnp.asarray(sig, X.dtype), bucket=bucket, interpret=interpret,
+            source=source)
     return solve
 
 
@@ -152,33 +159,64 @@ def sparse_solver(obj: Objective, lam_n, sig) -> LocalSolver:
     return solve
 
 
+def sparse_pallas_solver(obj: Objective, lam_n, sig, bucket: int,
+                         interpret: Optional[bool] = None,
+                         source: str = "ad-hoc arrays") -> LocalSolver:
+    from repro.kernels import ops as kops
+
+    def solve(data, y, a, v):
+        idx, val = data
+        return kops.sdca_sparse_bucket_subepoch(
+            obj, idx, val, y, a, v, jnp.asarray(lam_n, val.dtype),
+            jnp.asarray(sig, val.dtype), bucket=bucket,
+            interpret=interpret, source=source)
+    return solve
+
+
+def resolve_auto_solver() -> str:
+    """What `local_solver="auto"` means here: "pallas" on TPU backends
+    (dense AND sparse — both kernels exist), "xla" everywhere else.
+    `$REPRO_LOCAL_SOLVER=xla|pallas` overrides in either direction
+    (the escape hatch for unprofiled TPU topologies / forcing the
+    interpret-mode kernel on CPU)."""
+    env = os.environ.get("REPRO_LOCAL_SOLVER", "").strip().lower()
+    if env:
+        if env not in ("xla", "pallas"):
+            raise ValueError(
+                f"$REPRO_LOCAL_SOLVER={env!r}: must be 'xla' or 'pallas'")
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
 def make_local_solver(kind: str, obj: Objective, lam_n, sig, *,
                       bucket: int = 1, sparse: bool = False,
                       model_axis: Optional[str] = None,
-                      interpret: Optional[bool] = None) -> LocalSolver:
+                      interpret: Optional[bool] = None,
+                      source: str = "ad-hoc arrays") -> LocalSolver:
     """Resolve an `AlgoConfig.local_solver` name to a LocalSolver.
 
-    "auto" resolves to "xla" on BOTH paths (the sparse Pallas kernel
-    does not exist yet — ROADMAP); only an EXPLICIT "pallas" on the
-    sparse path is an error, and unknown kinds are rejected everywhere.
+    "auto" resolves via `resolve_auto_solver`: "pallas" on TPU backends
+    for BOTH the dense and sparse paths, "xla" elsewhere, with
+    `$REPRO_LOCAL_SOLVER` as the override.  Unknown kinds are rejected
+    everywhere; "pallas" + feature sharding (model-axis psum) is not
+    supported yet on either path.  `source` labels the data provenance
+    (tile cache vs ad-hoc arrays) in kernel alignment errors.
     """
     if kind == "auto":
-        kind = "xla"
+        kind = resolve_auto_solver()
+    if kind not in ("xla", "pallas"):
+        raise ValueError(f"unknown local_solver {kind!r}")
+    if kind == "pallas" and model_axis is not None:
+        raise ValueError("local_solver='pallas' does not support "
+                         "feature sharding (model-axis psum) yet")
     if sparse:
         if kind == "pallas":
-            raise ValueError("the Pallas bucket kernel is dense-only; "
-                             "sparse workloads use the gather/scatter path")
-        if kind != "xla":
-            raise ValueError(f"unknown local_solver {kind!r}")
+            return sparse_pallas_solver(obj, lam_n, sig, bucket,
+                                        interpret=interpret, source=source)
         return sparse_solver(obj, lam_n, sig)
     if kind == "pallas":
-        if model_axis is not None:
-            raise ValueError("local_solver='pallas' does not support "
-                             "feature sharding (model-axis psum) yet")
         return dense_pallas_solver(obj, lam_n, sig, bucket,
-                                   interpret=interpret)
-    if kind != "xla":
-        raise ValueError(f"unknown local_solver {kind!r}")
+                                   interpret=interpret, source=source)
     return dense_xla_solver(obj, lam_n, sig, bucket, model_axis=model_axis)
 
 
@@ -609,7 +647,7 @@ def sharded_epoch(
     solver = make_local_solver(
         algo.local_solver, obj, lam_n, sig, bucket=algo.bucket,
         sparse=isinstance(block, SparseBlock), model_axis=model_axis,
-        interpret=interpret)
+        interpret=interpret, source="resident shard arrays")
     dv_scale = (1.0 / workers if algo.aggregation == "averaging" else 1.0)
     return run_epoch(
         coll, solver, algo, block, y, a, v, epoch,
@@ -704,7 +742,7 @@ def sim_epoch_sparse(
     W = plan.pods * plan.lanes
     solver = make_local_solver(
         spec.algo.local_solver, obj, lam * n, spec.sigma_prime(W),
-        sparse=True)
+        bucket=B, sparse=True)
     dv_scale = (1.0 / W if spec.algo.aggregation == "averaging" else 1.0)
     _, _, a_new, v_new = run_epoch(
         coll, solver, spec.algo, SparseBlock(idx[ex], val[ex]), y[ex],
@@ -827,7 +865,9 @@ def make_streamed_epoch(obj: Objective, spec, plan, feed: ChunkFeed, *,
     W = plan.pods * plan.lanes
     solver = make_local_solver(
         spec.algo.local_solver, obj, lam * feed.n, spec.sigma_prime(W),
-        bucket=feed.bucket, sparse=feed.sparse)
+        bucket=feed.bucket, sparse=feed.sparse,
+        source=("tile cache" if getattr(feed, "cache", None) is not None
+                else "array feed"))
     dv_scale = (1.0 / W if spec.algo.aggregation == "averaging" else 1.0)
     step = make_streamed_step(coll, solver, spec.algo,
                               dv_scale=dv_scale, jit=jit_step)

@@ -112,6 +112,10 @@ def sparse_local_subepoch(
 
     No Gram trick (sparse-sparse Gram is not worth it on the VPU); the
     bucket optimization still applies upstream as shuffle granularity.
+    This is the XLA reference path; on TPU the engine routes sparse
+    sub-epochs through `kernels.ops.sdca_sparse_bucket_subepoch`, which
+    keeps v VMEM-resident and is bitwise-identical to this scan for
+    rows obeying the CSR no-duplicate-nonzero invariant (DESIGN.md S11).
     """
     qii = jnp.sum(val * val, axis=1)                    # (n_local,)
 

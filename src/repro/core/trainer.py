@@ -143,6 +143,7 @@ def fit_dataset(name: str, *,
                 n: Optional[int] = None, d: Optional[int] = None,
                 streamed: bool = False, cache_dir=None, data_dir=None,
                 bucket: Optional[int] = None,
+                nnz_multiple: Optional[int] = None,
                 max_epochs: int = 100, tol: float = 1e-3,
                 gap_every: int = 0, verbose: bool = False,
                 return_trainer: bool = False):
@@ -158,7 +159,8 @@ def fit_dataset(name: str, *,
                     "repro.api.Session(name, ...).fit(...)")
     session = Session(name, objective=objective, lam=lam, cfg=cfg,
                       n=n, d=d, streamed=streamed, cache_dir=cache_dir,
-                      data_dir=data_dir, bucket=bucket)
+                      data_dir=data_dir, bucket=bucket,
+                      nnz_multiple=nnz_multiple)
     res = session.fit(max_epochs=max_epochs, tol=tol,
                       gap_every=gap_every, verbose=verbose)
     return (res, session) if return_trainer else res

@@ -46,7 +46,11 @@ __all__ = [
 ]
 
 CACHE_MAGIC = "repro-tile-cache"
-CACHE_VERSION = 1
+# v2: synthetic sparse rows are deduplicated (formats.zero_duplicates)
+# and criteo sub rows are 40 wide — pre-PR4 caches hold different bytes
+# (including duplicate-nonzero rows that break the sparse Pallas
+# kernel's bitwise contract), so they must not be silently reused.
+CACHE_VERSION = 2
 
 _SUBLANE = 8          # pad d to the VPU sublane multiple
 
@@ -117,6 +121,7 @@ def build_cache(path, name: str, *, y, X=None, idx=None, val=None,
                 d: int | None = None, kind: str | None = None,
                 bucket: int = 16, pods: int = 1,
                 pad_multiple: int | None = None,
+                nnz_multiple: int | None = None,
                 objective: str = "logistic") -> "TileCache":
     """Pack arrays into bucket tiles and write a cache directory.
 
@@ -124,6 +129,10 @@ def build_cache(path, name: str, *, y, X=None, idx=None, val=None,
     ``d``.  ``pad_multiple`` defaults to ``pods * bucket`` — callers
     that know the training topology pass the stricter
     pods*lanes*lanes*chunks*bucket so every partition mode divides.
+    ``nnz_multiple`` (sparse only) zero-pads the row width with inert
+    idx=0/val=0 columns up to that multiple, so cached tiles land
+    lane-aligned for the sparse Pallas kernel (which needs nnz % 8 == 0
+    — DESIGN.md S11); padding columns never change margins or updates.
     """
     path = pathlib.Path(path)
     if kind is None:
@@ -152,6 +161,12 @@ def build_cache(path, name: str, *, y, X=None, idx=None, val=None,
         val = np.ascontiguousarray(np.asarray(val, np.float32))
         if d is None:
             raise ValueError("sparse build_cache requires d")
+        if nnz_multiple:
+            pad_w = _ceil_to(max(idx.shape[1], 1), nnz_multiple) \
+                - idx.shape[1]
+            if pad_w:
+                idx = np.pad(idx, ((0, 0), (0, pad_w)))
+                val = np.pad(val, ((0, 0), (0, pad_w)))
         y, _, idx, val = pad_examples(y, mult, idx=idx, val=val)
         n = y.shape[0]
         nnz = idx.shape[1]

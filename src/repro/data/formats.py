@@ -28,7 +28,7 @@ import numpy as np
 
 __all__ = [
     "parse_svmlight", "parse_csv", "dump_svmlight", "dump_csv",
-    "to_dense",
+    "to_dense", "zero_duplicates",
 ]
 
 Source = Union[str, os.PathLike, IO[str], Iterable[str]]
@@ -168,6 +168,27 @@ def to_dense(idx: np.ndarray, val: np.ndarray, d: int) -> np.ndarray:
     cols = np.repeat(np.arange(n), nnz)
     np.add.at(X, (idx.reshape(-1), cols), val.reshape(-1))
     return X
+
+
+def zero_duplicates(idx: np.ndarray, val: np.ndarray) -> np.ndarray:
+    """Enforce the padded-CSR invariant: at most one NONZERO value per
+    feature id per row (DESIGN.md S11).
+
+    Real svmlight/CSR data satisfies this by construction; synthetic
+    samplers that draw ids with replacement do not.  The repeated
+    entries' values are zeroed (first occurrence wins), which keeps
+    margins/updates well-defined AND is what makes the sparse Pallas
+    kernel's per-bucket scatter bitwise-identical to the per-coordinate
+    XLA scan (zero-valued duplicates contribute exact zeros on both
+    paths).  Returns the cleaned val; idx is left untouched.
+    """
+    order = np.argsort(idx, axis=1, kind="stable")
+    sorted_idx = np.take_along_axis(idx, order, axis=1)
+    dup_sorted = np.zeros_like(sorted_idx, dtype=bool)
+    dup_sorted[:, 1:] = sorted_idx[:, 1:] == sorted_idx[:, :-1]
+    dup = np.zeros_like(dup_sorted)
+    np.put_along_axis(dup, order, dup_sorted, axis=1)
+    return np.where(dup, np.zeros((), val.dtype), val)
 
 
 # ---------------------------------------------------------------------------

@@ -50,12 +50,16 @@ class DatasetSpec:
 
 
 REGISTRY = {
-    # criteo-kaggle: the paper's headline workload (45M x 1M, ~39 nnz);
+    # criteo-kaggle: the paper's headline workload (45M x 1M, ~39 nnz
+    # — the REAL row width; the synthetic fallback draws 40-wide rows
+    # so offline tiles land kernel-aligned and local_solver="pallas"
+    # works out of the box, and raw-file ingests align via
+    # materialize(..., nnz_multiple=8) / Session(nnz_multiple=8)).
     # "-sub" marks that offline runs use a documented-scale subsample.
     "criteo-kaggle-sub": DatasetSpec(
         "criteo-kaggle-sub", "sparse", "logistic",
         full_n=45_840_617, full_d=1_000_000, nnz=39,
-        sub_n=8_192, sub_d=4_096, sub_nnz=39, skew=1.1, seed=1,
+        sub_n=8_192, sub_d=4_096, sub_nnz=40, skew=1.1, seed=1,
         source="https://labs.criteo.com/2014/02/"
                "kaggle-display-advertising-challenge-dataset/"),
     # HIGGS: dense, narrow — every chip is an example-parallel worker.
@@ -185,12 +189,17 @@ def cache_root(cache_dir=None) -> pathlib.Path:
 def materialize(name: str, cache_dir=None, *, bucket: int = 16,
                 pods: int = 1, n: Optional[int] = None,
                 d: Optional[int] = None, pad_multiple: Optional[int] = None,
+                nnz_multiple: Optional[int] = None,
                 data_dir=None) -> tile_cache.TileCache:
     """Dataset name -> opened `TileCache`, building it if missing.
 
     The cache directory is keyed by everything that changes the bytes
-    (shape, bucket, pod sharding, cache version), so different training
-    topologies coexist and a version bump invalidates cleanly.
+    (shape, bucket, pod sharding, nnz padding, cache version), so
+    different training topologies coexist and a version bump
+    invalidates cleanly.  ``nnz_multiple`` pads sparse row widths with
+    inert columns so tiles land lane-aligned for the sparse Pallas
+    kernel (raw svmlight ingests with odd nnz need this to train with
+    local_solver="pallas"; the synthetic specs are pre-aligned).
     """
     spec = get_spec(name)
     root = cache_root(cache_dir)
@@ -208,8 +217,9 @@ def materialize(name: str, cache_dir=None, *, bucket: int = 16,
         fp = hashlib.sha1(
             f"{st.st_size}-{st.st_mtime_ns}".encode()).hexdigest()[:10]
         raw_key = f"-raw{fp}"
+    nnz_key = f"-z{nnz_multiple}" if nnz_multiple else ""
     key = (f"{name}-n{n_key}-d{d or spec.sub_d}"
-           f"-b{bucket}-p{pods}-m{mult}{raw_key}"
+           f"-b{bucket}-p{pods}-m{mult}{nnz_key}{raw_key}"
            f"-v{tile_cache.CACHE_VERSION}")
     path = root / key
     if (path / "meta.json").exists():
@@ -225,7 +235,7 @@ def materialize(name: str, cache_dir=None, *, bucket: int = 16,
         tile_cache.build_cache(
             tmp, name, y=ds.y, idx=ds.idx, val=ds.val, d=ds.d,
             kind="sparse", bucket=bucket, pods=pods, pad_multiple=mult,
-            objective=spec.objective)
+            nnz_multiple=nnz_multiple, objective=spec.objective)
     else:
         tile_cache.build_cache(
             tmp, name, y=ds.y, X=ds.X, kind="dense", bucket=bucket,

@@ -68,6 +68,11 @@ def make_sparse_classification(n: int = 100_000, d: int = 1_000, *,
     else:
         idx = rng.integers(0, d, size=(n, nnz)).astype(np.int32)
     val = (rng.standard_normal((n, nnz)) / np.sqrt(nnz)).astype(np.float32)
+    # real CSR rows never repeat a feature id; sampling with replacement
+    # does, so zero the repeats (keeps the padded-CSR invariant every
+    # solver path — including the sparse Pallas kernel — relies on)
+    from .formats import zero_duplicates
+    val = zero_duplicates(idx, val)
     w = rng.standard_normal(d).astype(np.float32)
     logits = (val * w[idx]).sum(axis=1) * 4.0
     y = _labels_from_logits(rng, logits)

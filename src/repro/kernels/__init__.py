@@ -1,12 +1,18 @@
 """Pallas TPU kernels for the perf-critical hot loops.
 
-sdca_bucket — the paper's bucketed SDCA sub-epoch (VMEM-resident shared
-              vector, streamed bucket tiles, MXU Gram/margin matmuls).
-rglru       — RG-LRU gated linear recurrence (RecurrentGemma hot loop).
+sdca_bucket        — the paper's bucketed SDCA sub-epoch, dense path
+                     (VMEM-resident shared vector, streamed bucket
+                     tiles, MXU Gram/margin matmuls).
+sdca_sparse_bucket — the sparse twin over padded-CSR (B x nnz) tiles:
+                     v pinned in VMEM for the whole sub-epoch, one
+                     gather/scatter per bucket, bitwise-identical to
+                     the XLA gather/scatter scan (DESIGN.md S11).
+rglru              — RG-LRU gated linear recurrence (RecurrentGemma
+                     hot loop).
 
 Each kernel ships ops.py (jit'd wrapper + padding + CPU interpret
 fallback) and ref.py (pure-jnp oracle used by the allclose sweeps).
 """
-from . import ops, ref, rglru, sdca_bucket
+from . import ops, ref, rglru, sdca_bucket, sdca_sparse_bucket
 
-__all__ = ["ops", "ref", "rglru", "sdca_bucket"]
+__all__ = ["ops", "ref", "rglru", "sdca_bucket", "sdca_sparse_bucket"]

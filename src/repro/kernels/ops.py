@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.objectives import Objective
-from . import sdca_bucket, rglru as _rglru
+from . import sdca_bucket, sdca_sparse_bucket, rglru as _rglru
 
 
 def _round_up(x: int, m: int) -> int:
@@ -23,12 +23,14 @@ def _interpret_default() -> bool:
 
 
 def sdca_bucket_subepoch(obj: Objective, Xl, yl, al, v0, lam_n, sig, *,
-                         bucket: int, interpret: bool | None = None):
+                         bucket: int, interpret: bool | None = None,
+                         source: str = "ad-hoc arrays"):
     """One worker's sub-epoch via the Pallas kernel.
 
     Xl: (d, n_local) columns in visiting order; returns (a_new, dv_raw)
     where dv_raw is the UNSCALED global delta (CoCoA+ convention, same as
-    dense_local_subepoch).
+    dense_local_subepoch).  `source` labels the data's provenance
+    (tile cache vs ad-hoc arrays) in alignment errors.
     """
     if interpret is None:
         interpret = _interpret_default()
@@ -59,9 +61,57 @@ def sdca_bucket_subepoch(obj: Objective, Xl, yl, al, v0, lam_n, sig, *,
     scal = jnp.stack([jnp.float32(lam_n), jnp.float32(sig)])
 
     a_new, v_fin = sdca_bucket.sdca_bucket_kernel(
-        obj, xb, yb, ab, v0p, scal, interpret)
+        obj, xb, yb, ab, v0p, scal, interpret, source)
 
     a_out = a_new[:, :B].reshape(-1)
+    dv = (v_fin[:d, 0] - v0.astype(jnp.float32)) / jnp.float32(sig)
+    return a_out.astype(al.dtype), dv.astype(v0.dtype)
+
+
+def sdca_sparse_bucket_subepoch(obj: Objective, idx, val, yl, al, v0,
+                                lam_n, sig, *, bucket: int,
+                                interpret: bool | None = None,
+                                source: str = "ad-hoc arrays"):
+    """One worker's SPARSE sub-epoch via the Pallas kernel.
+
+    idx/val: (n_local, nnz) padded-CSR rows in visiting order; v0: (d,)
+    replicated shared vector.  Returns (a_new, dv_raw) with dv_raw the
+    UNSCALED global delta — call-compatible with
+    `core.sdca.sparse_local_subepoch` and BITWISE-identical to it for
+    rows obeying the CSR no-duplicate-nonzero invariant (see
+    kernels/sdca_sparse_bucket.py).  Unlike the dense wrapper there is
+    no silent B/nnz padding: tile alignment is a data-layout contract
+    (the cache stores tiles pre-aligned) and misalignment raises with
+    the fix spelled out.  Only d is padded (zero rows, never indexed).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    n_local, nnz = idx.shape
+    B = bucket
+    if B <= 0 or n_local % B:
+        raise ValueError(
+            f"bucket={B} must divide the {source} chunk's row count "
+            f"{n_local} (the engine hands the kernel whole buckets)")
+    d = v0.shape[0]
+    d_pad = _round_up(max(d, 8), 8)
+
+    idxb = idx.reshape(n_local // B, B, nnz)
+    valb = val.reshape(n_local // B, B, nnz)
+    yb = yl.reshape(n_local // B, B)
+    ab = al.reshape(n_local // B, B)
+    # per-row curvature at FULL chunk shape — the scan's exact
+    # expression; the kernel must not recompute it per tile (see
+    # sdca_sparse_bucket._kernel on why this is bitwise-load-bearing)
+    valf = val.astype(jnp.float32)
+    qb = jnp.sum(valf * valf, axis=1).reshape(n_local // B, B)
+    v0p = jnp.zeros((d_pad, 1), jnp.float32).at[:d, 0].set(
+        v0.astype(jnp.float32))
+    scal = jnp.stack([jnp.float32(lam_n), jnp.float32(sig)])
+
+    a_new, v_fin = sdca_sparse_bucket.sdca_sparse_bucket_kernel(
+        obj, idxb, valb, yb, ab, qb, v0p, scal, interpret, source)
+
+    a_out = a_new.reshape(-1)
     dv = (v_fin[:d, 0] - v0.astype(jnp.float32)) / jnp.float32(sig)
     return a_out.astype(al.dtype), dv.astype(v0.dtype)
 

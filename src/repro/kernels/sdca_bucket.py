@@ -77,20 +77,29 @@ def _kernel(obj: Objective, x_ref, y_ref, a_ref, scal_ref, v_ref,
     aout_ref[0] = (a0 + deltas).astype(aout_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 6))
+@functools.partial(jax.jit, static_argnums=(0, 6, 7))
 def sdca_bucket_kernel(obj: Objective, xb: Array, yb: Array, ab: Array,
-                       v0: Array, scal: Array,
-                       interpret: bool = False) -> tuple[Array, Array]:
+                       v0: Array, scal: Array, interpret: bool = False,
+                       source: str = "ad-hoc arrays"
+                       ) -> tuple[Array, Array]:
     """Run the sub-epoch kernel.
 
     xb: (nb, d_pad, B) bucket tiles in visiting order
     yb, ab: (nb, B);  v0: (d_pad, 1) f32;  scal: (2,) f32 = [lam*n, sigma']
     Returns (a_new (nb, B), v_final (d_pad, 1)).  v_final includes the
     sigma'-scaled local evolution (callers unscale the global delta).
+    `source` names where the tiles came from (tile cache vs ad-hoc
+    arrays) so alignment errors point at the right fix.
     """
     nb, d_pad, B = xb.shape
     if d_pad % 8 or B % 8:
-        raise ValueError(f"d_pad ({d_pad}) and B ({B}) must be multiples of 8")
+        raise ValueError(
+            f"dense bucket tiles from {source} have (d_pad={d_pad}, "
+            f"B={B}); the Pallas kernel needs both to be multiples of 8 "
+            f"(f32 sublane tile).  Fix: rebuild the tile cache at an "
+            f"aligned bucket size for cached tiles, or route ad-hoc "
+            f"arrays through ops.sdca_bucket_subepoch (it zero-pads "
+            f"d and B automatically).")
 
     grid = (nb,)
     a_new, v_fin = pl.pallas_call(

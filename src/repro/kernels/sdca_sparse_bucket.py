@@ -1,0 +1,216 @@
+"""Pallas TPU kernel: one worker's SPARSE bucketed SDCA sub-epoch.
+
+The sparse twin of kernels/sdca_bucket.py (DESIGN.md S11).  The XLA
+formulation (`core.sdca.sparse_local_subepoch`) is a per-coordinate
+`lax.scan` whose carry is the FULL shared vector v: every coordinate
+pays a v-sized gather + scatter through HBM.  Here the paper's
+cache-resident shared vector maps onto VMEM:
+
+  * v (d_pad x 1, f32) is pinned in VMEM for the whole sub-epoch via
+    input/output aliasing + a constant index map — idx/val tiles are
+    the ONLY per-bucket HBM traffic;
+  * each grid step streams one (B, nnz) idx/val tile pair HBM->VMEM —
+    exactly the mmap-aligned layout `data/cache.py` stores, so cached
+    tiles DMA straight in;
+  * the touched feature rows are gathered once per bucket into a
+    bucket-local working set W (B, nnz) at bucket entry;
+  * the in-bucket recursion runs on VMEM-resident state only: O(B*nnz)
+    gather/scatter scalars + an O(B) delta recursion whose cross-
+    coordinate margin corrections are vectorized (B, nnz) x nnz
+    compare/accumulate VPU work (no Gram matrix: a sparse-sparse Gram
+    needs the same index matching but materializes B^2 values that are
+    almost all zero);
+  * v is written back once per bucket (one scatter pass in visiting
+    order) instead of once per coordinate.
+
+Bit-equivalence contract: for the same visiting order the kernel is
+BITWISE-identical to `sparse_local_subepoch` (pinned by interpret-mode
+tests on CPU).  Two things make that hold and must not be "simplified"
+away:
+
+  * every floating-point add applies the exact values the scan adds —
+    the per-coordinate update row u = (sigma' * delta / lam_n) * val
+    is computed ONCE (same association as the scan) and only ever
+    ADDED elementwise; folding the multiply into the adds lets XLA
+    fuse them into FMAs and drifts low bits;
+  * rows must satisfy the CSR invariant: no duplicate feature id with
+    a nonzero value within a row (padding with idx=0/val=0 is fine —
+    zero-valued duplicates add exact zeros on both paths).  Real
+    svmlight/CSR data satisfies this by construction;
+    `data/formats.zero_duplicates` enforces it for synthetic data.
+
+Grid is 1-D over buckets with "arbitrary" dimension semantics: buckets
+are processed IN ORDER (sequential SDCA semantics).
+
+Alignment: B and nnz must be multiples of 8 (f32 sublane tile), d_pad
+a multiple of 8, and v must fit the VMEM budget below.  Scalars
+(lam*n, sigma') ride in SMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.objectives import Objective
+from .pallas_compat import compiler_params as _compiler_params
+
+Array = jax.Array
+
+#: VMEM bytes the resident shared vector may occupy (~half a v5e core's
+#: 16 MB, leaving room for double-buffered idx/val tiles + the working
+#: set).  d above this must use local_solver="xla" (HBM-resident v) or
+#: shard features.
+V_VMEM_BUDGET_BYTES = 8 * 2 ** 20
+
+
+def _kernel(obj: Objective, idx_ref, val_ref, y_ref, a_ref, q_ref,
+            scal_ref, v_ref, aout_ref, vout_ref):
+    """Body for one bucket (one grid step)."""
+    first = pl.program_id(0) == 0
+
+    # v lives in the aliased output block; seed it from the input once.
+    @pl.when(first)
+    def _():
+        vout_ref[...] = v_ref[...]
+
+    idx = idx_ref[0]                            # (B, nnz) int32
+    vals = val_ref[0].astype(jnp.float32)       # (B, nnz)
+    y = y_ref[0].astype(jnp.float32)            # (B,)
+    a0 = a_ref[0].astype(jnp.float32)           # (B,)
+    # per-row curvature ||x_i||^2, PRECOMPUTED by the wrapper with the
+    # scan's exact whole-array row-sum: recomputing it per tile inside
+    # the kernel lets XLA vectorize the reduction differently and
+    # drifts q by 1 ulp on some rows, which the bisection amplifies —
+    # the bitwise contract dies there (found the hard way).
+    qrow = q_ref[0].astype(jnp.float32)         # (B,)
+    lam_n = scal_ref[0]
+    sig = scal_ref[1]
+    B, nnz = idx.shape
+
+    # 1. bucket entry: gather the touched rows into the working set
+    #    W[i, k] = v[idx[i, k]]  (the only reads of v this bucket)
+    def gather(t, W):
+        i = t // nnz
+        k = t - i * nnz
+        p = jax.lax.dynamic_slice(idx, (i, k), (1, 1))[0, 0]
+        w = vout_ref[p, 0]
+        return jax.lax.dynamic_update_slice(W, w[None, None], (i, k))
+
+    W = jax.lax.fori_loop(0, B * nnz, gather,
+                          jnp.zeros((B, nnz), jnp.float32))
+
+    # 2. in-bucket recursion entirely on VMEM-resident state.  After
+    #    coordinate i, later rows' working-set entries that alias a
+    #    feature i touched receive the SAME u-element the scan
+    #    scatter-adds into v, so margins stay bit-equal.
+    def body(i, carry):
+        W, U, deltas = carry
+        vi = jax.lax.dynamic_slice_in_dim(vals, i, 1, 0)[0]    # (nnz,)
+        ii = jax.lax.dynamic_slice_in_dim(idx, i, 1, 0)[0]
+        wi = jax.lax.dynamic_slice_in_dim(W, i, 1, 0)[0]
+        m = jnp.sum(wi * vi)
+        q = jax.lax.dynamic_index_in_dim(qrow, i, keepdims=False)
+        yi = jax.lax.dynamic_index_in_dim(y, i, keepdims=False)
+        ai = jax.lax.dynamic_index_in_dim(a0, i, keepdims=False)
+        d = obj.delta(m, ai, yi, sig * q / lam_n)
+        # the scan's update row, computed once with its association
+        u = (sig * d / lam_n) * vi
+        match = idx[:, :, None] == ii[None, None, :]   # (B, nnz, nnz)
+        corr = jnp.sum(jnp.where(match, u[None, None, :], 0.0), axis=-1)
+        hit = jnp.any(match, axis=-1)
+        W = jnp.where(hit, W + corr, W)
+        U = jax.lax.dynamic_update_slice_in_dim(U, u[None], i, axis=0)
+        deltas = jax.lax.dynamic_update_index_in_dim(deltas, d, i, axis=0)
+        return W, U, deltas
+
+    _, U, deltas = jax.lax.fori_loop(
+        0, B, body, (W, jnp.zeros((B, nnz), jnp.float32),
+                     jnp.zeros((B,), jnp.float32)))
+
+    # 3. scatter back into v ONCE per bucket, rows in visiting order so
+    #    shared features accumulate in the scan's sequence
+    def scatter(t, carry):
+        i = t // nnz
+        k = t - i * nnz
+        p = jax.lax.dynamic_slice(idx, (i, k), (1, 1))[0, 0]
+        u = jax.lax.dynamic_slice(U, (i, k), (1, 1))[0, 0]
+        vout_ref[p, 0] = vout_ref[p, 0] + u
+        return carry
+
+    jax.lax.fori_loop(0, B * nnz, scatter, 0)
+    aout_ref[0] = (a0 + deltas).astype(aout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 8, 9))
+def sdca_sparse_bucket_kernel(obj: Objective, idx: Array, val: Array,
+                              yb: Array, ab: Array, qb: Array,
+                              v0: Array, scal: Array,
+                              interpret: bool = False,
+                              source: str = "ad-hoc arrays"
+                              ) -> tuple[Array, Array]:
+    """Run the sparse sub-epoch kernel.
+
+    idx/val: (nb, B, nnz) bucket tiles in visiting order (the tile
+    cache's on-disk layout); yb, ab, qb: (nb, B) — qb is the per-row
+    curvature sum(val^2) precomputed at full-chunk shape (see _kernel);
+    v0: (d_pad, 1) f32; scal: (2,) f32 = [lam*n, sigma'].  Returns
+    (a_new (nb, B), v_final (d_pad, 1)); v_final includes the
+    sigma'-scaled local evolution (callers unscale the global delta).
+    `source` names where the tiles came from so alignment errors point
+    at the right fix.
+    """
+    nb, B, nnz = idx.shape
+    d_pad = v0.shape[0]
+    if B % 8 or nnz % 8:
+        raise ValueError(
+            f"sparse bucket tiles from {source} have (B={B}, nnz={nnz}); "
+            f"the Pallas kernel needs both to be multiples of 8 "
+            f"(f32 sublane tile).  Fix: rebuild the tile cache with "
+            f"build_cache(..., nnz_multiple=8) / materialize(..., "
+            f"nnz_multiple=8) for cached tiles, or zero-pad ad-hoc "
+            f"idx/val arrays with idx=0/val=0 columns (and pick a "
+            f"bucket size that is a multiple of 8).")
+    if d_pad % 8:
+        raise ValueError(
+            f"v tile from {source} has d_pad={d_pad}, which must be a "
+            f"multiple of 8; pad the shared vector with zero rows "
+            f"(ops.sdca_sparse_bucket_subepoch does this automatically)")
+    if d_pad * 4 > V_VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"shared vector of d_pad={d_pad} features ({d_pad * 4} "
+            f"bytes) exceeds the sparse kernel's VMEM budget "
+            f"({V_VMEM_BUDGET_BYTES} bytes, ~{V_VMEM_BUDGET_BYTES // 4} "
+            f"features).  Use local_solver='xla' (HBM-resident v) for "
+            f"this workload, or shard features.")
+
+    grid = (nb,)
+    a_new, v_fin = pl.pallas_call(
+        functools.partial(_kernel, obj),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, B, nnz), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, B, nnz), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((d_pad, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec((d_pad, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, B), ab.dtype),
+            jax.ShapeDtypeStruct((d_pad, 1), jnp.float32),
+        ],
+        input_output_aliases={6: 1},   # v0 buffer reused as v_final
+        compiler_params=_compiler_params(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(idx, val, yb, ab, qb, scal, v0)
+    return a_new, v_fin

@@ -24,9 +24,11 @@ Workers = pods x data-lanes (x model-lanes too when features are
 replicated — narrow datasets use the whole mesh as example-parallel
 workers).  sigma' = #workers (CoCoA+ additive aggregation).
 
-`GLMScale.local_solver="pallas"` routes each worker's dense sub-epoch
-through the Pallas bucket kernel (kernels/sdca_bucket.py) instead of
-the XLA scan — the same `LocalSolver` seam the simulator uses.
+`GLMScale.local_solver="pallas"` routes each worker's sub-epoch through
+the Pallas bucket kernels — dense (kernels/sdca_bucket.py) AND sparse
+(kernels/sdca_sparse_bucket.py, VMEM-resident shared vector over CSR
+tiles) — instead of the XLA scans; "auto" picks pallas on TPU backends
+(DESIGN.md S11).  It is the same `LocalSolver` seam the simulator uses.
 """
 from __future__ import annotations
 

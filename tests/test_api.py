@@ -442,7 +442,10 @@ def test_streamed_trainer_shim_warns(tmp_path):
 
 # -- local-solver dispatch (satellite) --------------------------------------
 
-def test_sparse_local_solver_auto_resolves_to_xla():
+def test_sparse_local_solver_auto_resolves_to_xla(monkeypatch):
+    # off-TPU (every CI host), "auto" still means the XLA scan; the
+    # TPU->pallas resolution + env hatch are pinned in test_engine.py
+    monkeypatch.delenv("REPRO_LOCAL_SOLVER", raising=False)
     from repro.core import make_local_solver
     from repro.core.objectives import LOGISTIC
 
@@ -460,8 +463,6 @@ def test_sparse_local_solver_auto_resolves_to_xla():
     np.testing.assert_array_equal(np.asarray(dv1), np.asarray(dv2))
     with pytest.raises(ValueError, match="unknown local_solver"):
         make_local_solver("nope", LOGISTIC, 1.0, 1.0, sparse=True)
-    with pytest.raises(ValueError, match="dense-only"):
-        make_local_solver("pallas", LOGISTIC, 1.0, 1.0, sparse=True)
 
 
 # -- bench compare (CI perf-trajectory satellite) ---------------------------
@@ -506,3 +507,46 @@ def test_bench_compare_flags_regressions():
     assert any("disappeared" in p
                for p in compare(prev, {"schema": "bench-summary/v1",
                                        "quick": True, "figures": {}}))
+
+
+def test_bench_compare_parity_trajectory():
+    """The sklearn-parity gate (PR-4 satellite): an absolute
+    predict_agree floor on every run + vanished parity records count
+    as regressions."""
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+    from benchmarks.compare import compare, parity_floor_problems
+
+    rec = {"dataset": "higgs", "solver": "estimator",
+           "score": 0.9, "score_sklearn": 0.9, "predict_agree": 0.999}
+    good = {"schema": "bench-summary/v1", "quick": True,
+            "figures": {"fig6": {"failed": False, "runtime_s": 5.0,
+                                 "parity": [rec]}}}
+    assert parity_floor_problems(good) == []
+
+    bad = {"schema": "bench-summary/v1", "quick": True,
+           "figures": {"fig6": {"failed": False, "runtime_s": 5.0,
+                                "parity": [dict(rec,
+                                                predict_agree=0.97)]}}}
+    probs = parity_floor_problems(bad)
+    assert probs and "0.99" in probs[0] and "fig6" in probs[0]
+    # a custom floor is honoured
+    assert parity_floor_problems(bad, floor=0.9) == []
+    # an already-failed figure doesn't double-report
+    failed = {"figures": {"fig6": {"failed": True,
+                                   "parity": [dict(rec,
+                                                   predict_agree=0.5)]}}}
+    assert parity_floor_problems(failed) == []
+
+    # cross-run: losing a parity record is a regression, keeping it is
+    # fine even if the value moved (the absolute floor owns the value)
+    lost = {"schema": "bench-summary/v1", "quick": True,
+            "figures": {"fig6": {"failed": False, "runtime_s": 5.0}}}
+    assert any("parity" in p and "disappeared" in p
+               for p in compare(good, lost))
+    moved = {"schema": "bench-summary/v1", "quick": True,
+             "figures": {"fig6": {"failed": False, "runtime_s": 5.0,
+                                  "parity": [dict(rec,
+                                                  predict_agree=0.992)]}}}
+    assert compare(good, moved) == []

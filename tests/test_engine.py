@@ -72,13 +72,53 @@ def test_engine_config_passthrough_everywhere():
 # -- local solver registry --------------------------------------------------
 
 def test_local_solver_registry_guards():
-    with pytest.raises(ValueError):
-        make_local_solver("pallas", LOGISTIC, 1.0, 1.0, sparse=True)
+    # sparse + pallas is a real solver now (PR 4); feature sharding is
+    # still unsupported on either pallas path, unknown kinds rejected
+    assert callable(make_local_solver("pallas", LOGISTIC, 1.0, 1.0,
+                                      bucket=8, sparse=True))
     with pytest.raises(ValueError):
         make_local_solver("pallas", LOGISTIC, 1.0, 1.0, bucket=8,
                           model_axis="model")
     with pytest.raises(ValueError):
+        make_local_solver("pallas", LOGISTIC, 1.0, 1.0, bucket=8,
+                          sparse=True, model_axis="model")
+    with pytest.raises(ValueError):
         make_local_solver("nope", LOGISTIC, 1.0, 1.0, bucket=8)
+    with pytest.raises(ValueError):
+        make_local_solver("nope", LOGISTIC, 1.0, 1.0, bucket=8,
+                          sparse=True)
+
+
+def test_local_solver_auto_resolution(monkeypatch):
+    """"auto" = backend-dependent (xla off-TPU) with the
+    $REPRO_LOCAL_SOLVER escape hatch in both directions."""
+    import numpy as np
+    from repro.core.engine import resolve_auto_solver
+    from repro.data import make_sparse_classification
+
+    monkeypatch.delenv("REPRO_LOCAL_SOLVER", raising=False)
+    assert resolve_auto_solver() == "xla"        # CPU/GPU test hosts
+    monkeypatch.setenv("REPRO_LOCAL_SOLVER", "pallas")
+    assert resolve_auto_solver() == "pallas"
+    monkeypatch.setenv("REPRO_LOCAL_SOLVER", "bogus")
+    with pytest.raises(ValueError, match="REPRO_LOCAL_SOLVER"):
+        resolve_auto_solver()
+
+    # env-forced pallas flows through make_local_solver("auto") and is
+    # bitwise-identical to the explicit kernel solver
+    monkeypatch.setenv("REPRO_LOCAL_SOLVER", "pallas")
+    (idx, val), y, d = make_sparse_classification(n=16, d=32, nnz=8,
+                                                  seed=0)
+    args = ((jnp.asarray(idx), jnp.asarray(val)), jnp.asarray(y),
+            jnp.zeros(16), jnp.zeros(d))
+    auto = make_local_solver("auto", LOGISTIC, 1.6, 1.0, bucket=8,
+                             sparse=True)
+    explicit = make_local_solver("pallas", LOGISTIC, 1.6, 1.0, bucket=8,
+                                 sparse=True)
+    a1, dv1 = auto(*args)
+    a2, dv2 = explicit(*args)
+    assert np.array_equal(np.asarray(a1), np.asarray(a2))
+    assert np.array_equal(np.asarray(dv1), np.asarray(dv2))
 
 
 def test_chunks_must_divide_buckets():
@@ -189,6 +229,95 @@ def test_sim_mesh_bitwise_equivalence_sparse():
         assert np.array_equal(np.asarray(iS).reshape(-1, nnz),
                               np.asarray(im))
         assert float(jnp.max(jnp.abs(vv))) > 0
+        print("OK")
+    """)
+    assert "OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_sparse_pallas_solver_resident_and_streamed_bitwise(tmp_path):
+    """`local_solver="pallas"` on the SPARSE path is bitwise-identical
+    to the XLA gather/scatter scan through the full training loop, on
+    both the resident and streamed-from-cache harnesses (the PR-4
+    acceptance pin; the kernel-level contract lives in
+    tests/test_kernels.py)."""
+    import numpy as np
+    import warnings
+    from repro.core import fit_dataset
+
+    outs: dict[tuple, tuple] = {}
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        for streamed in (False, True):
+            for solver in ("xla", "pallas"):
+                cfg = EngineConfig.make(
+                    pods=2, lanes=2, bucket=8, chunks=2,
+                    partition="hierarchical", deterministic=True,
+                    local_solver=solver)
+                res = fit_dataset(
+                    "synthetic-sparse", cfg=cfg, cache_dir=tmp_path,
+                    n=256, d=64, streamed=streamed, max_epochs=2,
+                    tol=0.0)
+                outs[(streamed, solver)] = (res.alpha, res.v)
+    for streamed in (False, True):
+        xa, xv = outs[(streamed, "xla")]
+        pa, pv = outs[(streamed, "pallas")]
+        assert np.array_equal(xa, pa), f"alpha differs (streamed={streamed})"
+        assert np.array_equal(xv, pv), f"v differs (streamed={streamed})"
+    assert np.abs(outs[(True, "pallas")][1]).max() > 0
+
+
+def test_sparse_pallas_solver_vmap_path_bitwise():
+    """The stacked-sim vmap path (deterministic=False) batches the
+    sparse Pallas kernel across virtual workers and still matches XLA
+    bitwise (pallas_call's vmap rule extends the grid)."""
+    import numpy as np
+    import warnings
+    from repro.core import fit_dataset
+
+    outs = {}
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        for solver in ("xla", "pallas"):
+            cfg = EngineConfig.make(lanes=4, bucket=8, chunks=2,
+                                    partition="dynamic",
+                                    local_solver=solver)
+            res = fit_dataset("synthetic-sparse", cfg=cfg, n=256, d=64,
+                              max_epochs=2, tol=0.0)
+            outs[solver] = (res.alpha, res.v)
+    assert np.array_equal(outs["xla"][0], outs["pallas"][0])
+    assert np.array_equal(outs["xla"][1], outs["pallas"][1])
+
+
+def test_sparse_pallas_local_solver_on_mesh_path():
+    """Sparse `local_solver='pallas'` through launch/glm.py's shard_map
+    program is BITWISE-identical to the XLA local solver (deterministic
+    collectives; interpret-mode kernel on CPU)."""
+    r = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.glm import GLMScale, make_sparse_epoch
+        from repro.launch.mesh import make_host_mesh
+        from repro.data import make_sparse_classification
+
+        K = 8; n, d, nnz = 1024, 256, 8
+        (idx, val), y, _ = make_sparse_classification(n=n, d=d, nnz=nnz,
+                                                      seed=2)
+        idx, val, y = (jnp.asarray(t) for t in (idx, val, y))
+        a0, v0 = jnp.zeros(n), jnp.zeros(d)
+        mesh = make_host_mesh(pod=1, data=K, model=1)
+        outs = {}
+        for solver in ("xla", "pallas"):
+            sc = GLMScale("s", "sparse", n=n, d=d, nnz=nnz, bucket=8,
+                          chunks=2, lam=1e-2, compress_pod=False,
+                          deterministic=True, local_solver=solver)
+            with mesh:
+                ep = jax.jit(make_sparse_epoch(sc, mesh))
+                st = (idx, val, y, a0, v0)
+                for e in range(2):
+                    st = ep(*st, jnp.int32(e))
+            outs[solver] = [np.asarray(t) for t in st]
+        for xa, pa in zip(outs["xla"], outs["pallas"]):
+            assert np.array_equal(xa, pa)
+        assert np.abs(outs["pallas"][4]).max() > 0
         print("OK")
     """)
     assert "OK" in r.stdout, r.stdout + r.stderr

@@ -98,11 +98,179 @@ def test_rglru_kernel_dtypes(dtype):
 
 
 def test_kernel_rejects_bad_tile():
-    with pytest.raises(ValueError):
-        from repro.kernels import sdca_bucket
+    from repro.kernels import sdca_bucket
+    with pytest.raises(ValueError, match="multiples of 8"):
         sdca_bucket.sdca_bucket_kernel(
             LOGISTIC, jnp.zeros((2, 9, 8)), jnp.zeros((2, 8)),
             jnp.zeros((2, 8)), jnp.zeros((9, 1)), jnp.zeros(2), True)
+    # the error names the offending data source
+    with pytest.raises(ValueError, match="tile cache"):
+        sdca_bucket.sdca_bucket_kernel(
+            LOGISTIC, jnp.zeros((2, 9, 8)), jnp.zeros((2, 8)),
+            jnp.zeros((2, 8)), jnp.zeros((9, 1)), jnp.zeros(2), True,
+            "tile cache")
+
+
+# ---------------------------------------------------------------------------
+# Sparse SDCA bucket kernel (kernels/sdca_sparse_bucket.py): the contract
+# is BITWISE equality with the XLA gather/scatter scan, not allclose.
+# ---------------------------------------------------------------------------
+
+from repro.core import sdca as core_sdca
+from repro.data.formats import zero_duplicates
+
+
+def _sparse_data(obj, n, d, nnz, seed, v_scale=0.1):
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, d, (n, nnz)).astype(np.int32)
+    val = (rng.standard_normal((n, nnz)) / np.sqrt(max(nnz, 1))
+           ).astype(np.float32)
+    val = zero_duplicates(idx, val)          # CSR invariant (S11)
+    y = np.asarray(rng.choice([-1.0, 1.0], n) if obj.classification
+                   else rng.standard_normal(n), np.float32)
+    a = np.zeros(n, np.float32)
+    v0 = (rng.standard_normal(d) * v_scale).astype(np.float32)
+    return (jnp.asarray(idx), jnp.asarray(val), jnp.asarray(y),
+            jnp.asarray(a), jnp.asarray(v0))
+
+
+def _run_both(obj, idx, val, y, a, v0, lam_n, sig, B):
+    a_ref, dv_ref = core_sdca.sparse_local_subepoch(
+        obj, idx, val, y, a, v0, jnp.float32(lam_n), jnp.float32(sig))
+    a_k, dv_k = ops.sdca_sparse_bucket_subepoch(
+        obj, idx, val, y, a, v0, jnp.float32(lam_n), jnp.float32(sig),
+        bucket=B, interpret=True)
+    return (np.asarray(a_ref), np.asarray(dv_ref),
+            np.asarray(a_k), np.asarray(dv_k))
+
+
+@pytest.mark.parametrize("obj", OBJS, ids=lambda o: o.name)
+@pytest.mark.parametrize("n,d,nnz,B", [
+    (32, 64, 8, 8),       # minimal tile
+    (64, 128, 16, 8),     # wider rows, several buckets
+    (64, 32, 8, 16),      # tiny d: heavy feature sharing inside buckets
+    (48, 1000, 8, 8),     # nearly collision-free rows
+])
+def test_sdca_sparse_kernel_bitwise_vs_scan(obj, n, d, nnz, B):
+    idx, val, y, a, v0 = _sparse_data(obj, n, d, nnz, seed=n * 7 + d)
+    a_ref, dv_ref, a_k, dv_k = _run_both(
+        obj, idx, val, y, a, v0, 0.1 * n, 2.0, B)
+    np.testing.assert_array_equal(a_k, a_ref)
+    np.testing.assert_array_equal(dv_k, dv_ref)
+    assert np.abs(dv_k).max() > 0          # actually moved
+
+
+@pytest.mark.parametrize("obj", OBJS, ids=lambda o: o.name)
+def test_sdca_sparse_kernel_sequential_semantics(obj):
+    """Buckets must be processed IN ORDER: one call over [b0, b1] must
+    equal b0 then b1 with the carried v — bitwise."""
+    n, d, nnz, B = 32, 64, 8, 16
+    idx, val, y, a, v0 = _sparse_data(obj, n, d, nnz, seed=5)
+    lam_n, sig = jnp.float32(3.2), jnp.float32(1.0)
+    a_all, dv_all = ops.sdca_sparse_bucket_subepoch(
+        obj, idx, val, y, a, v0, lam_n, sig, bucket=B, interpret=True)
+    a1, dv1 = ops.sdca_sparse_bucket_subepoch(
+        obj, idx[:B], val[:B], y[:B], a[:B], v0, lam_n, sig,
+        bucket=B, interpret=True)
+    v_mid = v0 + sig * dv1
+    a2, _ = ops.sdca_sparse_bucket_subepoch(
+        obj, idx[B:], val[B:], y[B:], a[B:], v_mid, lam_n, sig,
+        bucket=B, interpret=True)
+    np.testing.assert_array_equal(np.asarray(a_all),
+                                  np.concatenate([a1, a2]))
+    assert np.abs(np.asarray(dv_all)).max() > 0
+
+
+def test_sdca_sparse_kernel_padding_rows_inert():
+    """Cache-style padding rows (idx=0, val=0, y=+1) leave v untouched
+    and the real rows' results bitwise-unchanged."""
+    n, d, nnz, B = 24, 64, 8, 8
+    idx, val, y, a, v0 = _sparse_data(LOGISTIC, n, d, nnz, seed=11)
+    pad = 8
+    idx_p = jnp.concatenate([idx, jnp.zeros((pad, nnz), jnp.int32)])
+    val_p = jnp.concatenate([val, jnp.zeros((pad, nnz), jnp.float32)])
+    y_p = jnp.concatenate([y, jnp.ones(pad, jnp.float32)])
+    a_p = jnp.concatenate([a, jnp.zeros(pad, jnp.float32)])
+    lam_n, sig = jnp.float32(0.1 * n), jnp.float32(2.0)
+    a1, dv1 = ops.sdca_sparse_bucket_subepoch(
+        LOGISTIC, idx, val, y, a, v0, lam_n, sig, bucket=B,
+        interpret=True)
+    a2, dv2 = ops.sdca_sparse_bucket_subepoch(
+        LOGISTIC, idx_p, val_p, y_p, a_p, v0, lam_n, sig, bucket=B,
+        interpret=True)
+    np.testing.assert_array_equal(np.asarray(a2)[:n], np.asarray(a1))
+    np.testing.assert_array_equal(np.asarray(dv2), np.asarray(dv1))
+
+
+def test_sdca_sparse_kernel_rejects_misalignment_actionably():
+    ok = dict(bucket=8, interpret=True)
+    idx, val, y, a, v0 = _sparse_data(LOGISTIC, 16, 32, 8, seed=0)
+    lam_n = sig = jnp.float32(1.0)
+    # nnz not a multiple of 8: names the alignment AND both fixes
+    with pytest.raises(ValueError, match="multiples of 8"):
+        ops.sdca_sparse_bucket_subepoch(
+            LOGISTIC, idx[:, :7], val[:, :7], y, a, v0, lam_n, sig, **ok)
+    with pytest.raises(ValueError, match="nnz_multiple"):
+        ops.sdca_sparse_bucket_subepoch(
+            LOGISTIC, idx[:, :7], val[:, :7], y, a, v0, lam_n, sig, **ok)
+    # the offending source is reported (cache vs ad-hoc arrays)
+    with pytest.raises(ValueError, match="ad-hoc arrays"):
+        ops.sdca_sparse_bucket_subepoch(
+            LOGISTIC, idx[:, :7], val[:, :7], y, a, v0, lam_n, sig, **ok)
+    with pytest.raises(ValueError, match="tile cache"):
+        ops.sdca_sparse_bucket_subepoch(
+            LOGISTIC, idx[:, :7], val[:, :7], y, a, v0, lam_n, sig,
+            bucket=8, interpret=True, source="tile cache")
+    # bucket not a multiple of 8
+    with pytest.raises(ValueError, match="multiples of 8"):
+        ops.sdca_sparse_bucket_subepoch(
+            LOGISTIC, idx, val, y, a, v0, lam_n, sig, bucket=4,
+            interpret=True)
+    # bucket must divide the chunk
+    with pytest.raises(ValueError, match="divide"):
+        ops.sdca_sparse_bucket_subepoch(
+            LOGISTIC, idx[:12], val[:12], y[:12], a[:12], v0, lam_n,
+            sig, **ok)
+
+
+def test_sdca_sparse_kernel_vmem_budget_guard():
+    from repro.kernels.sdca_sparse_bucket import V_VMEM_BUDGET_BYTES
+    d_big = V_VMEM_BUDGET_BYTES // 4 + 8
+    idx, val, y, a, _ = _sparse_data(LOGISTIC, 8, 32, 8, seed=1)
+    with pytest.raises(ValueError, match="xla"):
+        ops.sdca_sparse_bucket_subepoch(
+            LOGISTIC, idx, val, y, a, jnp.zeros(d_big, jnp.float32),
+            jnp.float32(1.0), jnp.float32(1.0), bucket=8, interpret=True)
+
+
+def test_sdca_sparse_kernel_bitwise_property():
+    """Hypothesis sweep: bitwise equality with the scan across random
+    shapes, objectives, scalings, and warm dual starts."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.sampled_from(OBJS),
+           st.sampled_from([8, 16]),            # bucket
+           st.integers(1, 3),                   # buckets per sub-epoch
+           st.sampled_from([8, 16]),            # nnz
+           st.integers(10, 200),                # d
+           st.integers(0, 2 ** 16),             # data seed
+           st.floats(0.05, 50.0),               # lam*n
+           st.sampled_from([1.0, 2.0, 8.0]))    # sigma'
+    @settings(max_examples=40, deadline=None)
+    def bitwise(obj, B, nb, nnz, d, seed, lam_n, sig):
+        n = B * nb
+        idx, val, y, a, v0 = _sparse_data(obj, n, d, nnz, seed=seed)
+        if obj.classification:    # feasible warm start: a*y in [0, 1)
+            rng = np.random.default_rng(seed + 1)
+            a = jnp.asarray(
+                rng.uniform(0, 0.5, n).astype(np.float32) * np.asarray(y))
+        a_ref, dv_ref, a_k, dv_k = _run_both(
+            obj, idx, val, y, a, v0, lam_n, sig, B)
+        np.testing.assert_array_equal(a_k, a_ref)
+        np.testing.assert_array_equal(dv_k, dv_ref)
+
+    bitwise()
 
 
 # ---------------------------------------------------------------------------

@@ -169,6 +169,68 @@ def test_cache_roundtrip_sparse_with_padding(tmp_path):
     assert (val2[n:] == 0).all() and (y2[n:] == 1.0).all()
 
 
+def test_cache_nnz_multiple_pads_rows_lane_aligned(tmp_path):
+    """build_cache(..., nnz_multiple=8) pads odd row widths with inert
+    idx=0/val=0 columns so tiles satisfy the sparse kernel's alignment
+    (PR-4 satellite)."""
+    rng = np.random.default_rng(7)
+    n, nnz, d, B = 32, 5, 16, 8               # nnz 5 -> padded to 8
+    idx = rng.integers(0, d, (n, nnz)).astype(np.int32)
+    val = rng.standard_normal((n, nnz)).astype(np.float32)
+    y = rng.choice([-1.0, 1.0], n).astype(np.float32)
+    tc = tile_cache.build_cache(tmp_path / "c", "t", idx=idx, val=val,
+                                y=y, d=d, bucket=B, nnz_multiple=8)
+    assert tc.meta.nnz == 8
+    (idx2, val2), y2 = tc.load_arrays()
+    np.testing.assert_array_equal(idx2[:, :nnz], idx)
+    np.testing.assert_array_equal(val2[:, :nnz], val)
+    assert (idx2[:, nnz:] == 0).all() and (val2[:, nnz:] == 0).all()
+    np.testing.assert_array_equal(y2, y)
+    # already-aligned widths are untouched, and the knob keys the
+    # materialize cache so aligned/unaligned builds coexist
+    tc2 = tile_cache.build_cache(tmp_path / "c2", "t", idx=idx2,
+                                 val=val2, y=y, d=d, bucket=B,
+                                 nnz_multiple=8)
+    assert tc2.meta.nnz == 8
+    a = registry.materialize("synthetic-sparse", tmp_path, n=64, d=32)
+    b = registry.materialize("synthetic-sparse", tmp_path, n=64, d=32,
+                             nnz_multiple=16)
+    assert a.path != b.path and b.meta.nnz == 16
+
+
+def test_raw_ingest_nnz_multiple_reaches_pallas(tmp_path):
+    """The alignment error's suggested fix is reachable from the top:
+    a raw svmlight ingest with an odd row width trains with
+    local_solver='pallas' once fit_dataset passes nnz_multiple=8."""
+    import warnings
+    from repro.core import EngineConfig, fit_dataset
+
+    rng = np.random.default_rng(9)
+    n, nnz, d = 96, 5, 64                     # nnz=5: misaligned raw rows
+    idx = rng.integers(0, d, (n, nnz)).astype(np.int32)
+    val = rng.standard_normal((n, nnz)).astype(np.float32)
+    val = formats.zero_duplicates(idx, val)
+    y = rng.choice([-1.0, 1.0], n).astype(np.float32)
+    raw_dir = tmp_path / "raw"
+    raw_dir.mkdir()
+    (raw_dir / "criteo-kaggle-sub.svm").write_text(
+        formats.dump_svmlight(idx, val, y))
+    kw = dict(cache_dir=tmp_path / "cache", data_dir=raw_dir,
+              streamed=True, max_epochs=2, tol=0.0, nnz_multiple=8)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        outs = {}
+        for solver in ("xla", "pallas"):
+            cfg = EngineConfig.make(lanes=2, bucket=8, chunks=2,
+                                    deterministic=True,
+                                    local_solver=solver)
+            res = fit_dataset("criteo-kaggle-sub", cfg=cfg, **kw)
+            outs[solver] = (res.alpha, res.v)
+    assert np.array_equal(outs["xla"][0], outs["pallas"][0])
+    assert np.array_equal(outs["xla"][1], outs["pallas"][1])
+    assert np.abs(outs["pallas"][1]).max() > 0
+
+
 def test_cache_version_and_magic_guard(tmp_path):
     rng = np.random.default_rng(3)
     X = rng.standard_normal((4, 16)).astype(np.float32)
@@ -225,8 +287,10 @@ def test_registry_specs_and_fallbacks():
     ds = registry.get_dataset("higgs", n=512)
     assert not ds.sparse and ds.X.shape == (28, 512)
     assert 0 < ds.scale < 1e-3
+    # row width is the kernel-aligned 40 (criteo's real ~39 padded to a
+    # multiple of 8 so local_solver="pallas" works out of the box)
     ds = registry.get_dataset("criteo-kaggle-sub", n=256, d=128)
-    assert ds.sparse and ds.idx.shape == (256, 39)
+    assert ds.sparse and ds.idx.shape == (256, 40)
     assert ds.provenance == "synthetic"
 
 
