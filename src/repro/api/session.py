@@ -74,6 +74,39 @@ def _pad_multiple(spec: EngineConfig, bucket: int) -> int:
     return dep.pods * dep.lanes * dep.lanes * algo.chunks * max(bucket, 1)
 
 
+def _check_sparse_kernel_invariant(spec: EngineConfig, idx: np.ndarray,
+                                   val: np.ndarray, d: int,
+                                   bucket: int) -> None:
+    """Ad-hoc sparse rows headed for the Pallas kernel must hold the
+    CSR no-duplicate-nonzero invariant (DESIGN.md S11) — checked HERE,
+    while the arrays are still concrete host arrays: inside the jitted
+    epoch program they are tracers and `kernels.ops` cannot see the
+    values.  Only enforced when the kernel will actually run them: the
+    XLA scan accumulates duplicates fine, so "auto" off-TPU, explicit
+    "xla", and backend-picked "auto" workloads the engine's misfit
+    fallback routes to the scan anyway all keep accepting such rows.
+    `bucket` must be the RESOLVED bucket (the one make_plan/the feed
+    will run with), not spec.algo.bucket — the two differ when the
+    Session bucket kwarg overrides the config.
+    """
+    kind = spec.algo.local_solver
+    if kind not in ("pallas", "auto"):
+        return
+    if kind == "auto":
+        kind, explicit = engine._resolve_auto()
+        if kind != "pallas":
+            return
+        if not explicit:
+            from repro.kernels import ops as kops
+            B = max(bucket, 1)
+            # n_local=B: divisibility is guaranteed by Session padding,
+            # so only the shape/budget misfits matter here
+            if kops.sparse_kernel_misfit(B, idx.shape[1], d, B):
+                return   # engine falls back to the XLA scan per-workload
+    from repro.data.formats import raise_on_duplicate_nonzeros
+    raise_on_duplicate_nonzeros(idx, val, "ad-hoc sparse rows")
+
+
 class Session:
     """Engine state + epoch control over one resolved data source."""
 
@@ -130,7 +163,8 @@ class Session:
         self.lam = float(default_lam if lam is None else lam)
 
     def _init_from_arrays(self, data, y, *, objective, lam, d, bucket,
-                          pad, jit_step: bool = True) -> None:
+                          pad, jit_step: bool = True,
+                          trusted_rows: bool = False) -> None:
         """Resident-array setup.  When padding grows n -> n', lam is
         rescaled by n/n' so the padded objective
 
@@ -153,6 +187,10 @@ class Session:
             val = np.asarray(data[1], np.float32)
             if d is None:
                 raise ValueError("sparse array data requires d")
+            if not trusted_rows:
+                # B is the resolved bucket make_plan/ArrayFeed run with
+                _check_sparse_kernel_invariant(self.spec, idx, val,
+                                               int(d), B)
             if pad:
                 from repro.data.cache import pad_examples
                 y, _, idx, val = pad_examples(
@@ -179,7 +217,7 @@ class Session:
             else:
                 feed = ArrayFeed(y, X=X, bucket=B)
             self._init_from_feed(feed, objective=self.obj, lam=self.lam,
-                                 jit_step=jit_step)
+                                 jit_step=jit_step, rows_checked=True)
             return
 
         if sparse:
@@ -224,8 +262,10 @@ class Session:
                 f"rebuild the cache at the training bucket size")
         if not streamed:
             arrays, y = cache.load_arrays()
+            # cache builds dedupe rows (CACHE_VERSION 2) — don't re-sort
+            # the whole dataset at construction to re-prove it
             kw = dict(objective=self.obj, lam=self.lam,
-                      bucket=meta.bucket, pad=False)
+                      bucket=meta.bucket, pad=False, trusted_rows=True)
             if meta.kind == "sparse":
                 self._init_from_arrays(arrays, y, d=meta.d, **kw)
             else:
@@ -236,14 +276,28 @@ class Session:
         self.cache = cache
         self.streamed = True
         self._init_from_feed(cache.feed(), objective=self.obj,
-                             lam=self.lam, jit_step=jit_step)
+                             lam=self.lam, jit_step=jit_step,
+                             rows_checked=True)
 
-    def _init_from_feed(self, feed, *, objective, lam, jit_step) -> None:
+    def _init_from_feed(self, feed, *, objective, lam, jit_step,
+                        rows_checked: bool = False) -> None:
         self._resolve_obj(objective, lam)
         self.feed = feed
         self.streamed = True
         self.sparse = bool(feed.sparse)
         self.n, self.d = int(feed.n), int(feed.d)
+        if (not rows_checked and self.sparse
+                and getattr(feed, "cache", None) is None):
+            # a user-supplied feed: check its rows here if it exposes
+            # them as concrete host arrays (ArrayFeed); opaque
+            # ChunkFeeds are bound by the protocol's documented CSR
+            # invariant instead (engine.ChunkFeed)
+            fidx = getattr(feed, "idx", None)
+            fval = getattr(feed, "val", None)
+            if fidx is not None and fval is not None:
+                _check_sparse_kernel_invariant(
+                    self.spec, np.asarray(fidx), np.asarray(fval),
+                    self.d, int(feed.bucket))
         src_cache = getattr(feed, "cache", None)
         if src_cache is not None:
             self.n_examples = src_cache.meta.n_examples
@@ -288,9 +342,13 @@ class Session:
             return
         ds = registry.get_dataset(name, n=n, d=d, data_dir=data_dir)
         if ds.sparse:
+            # registry rows are deduped at the source (synthetic
+            # samplers run zero_duplicates; svmlight holds the
+            # invariant by construction)
             self._init_from_arrays((ds.idx, ds.val), ds.y,
                                    objective=objective, lam=lam,
-                                   d=ds.d, bucket=B, pad=True)
+                                   d=ds.d, bucket=B, pad=True,
+                                   trusted_rows=True)
         else:
             self._init_from_arrays(ds.X, ds.y, objective=objective,
                                    lam=lam, d=None, bucket=B, pad=True)

@@ -51,6 +51,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import warnings
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Mapping, Optional, Protocol, Union
 
@@ -173,19 +174,71 @@ def sparse_pallas_solver(obj: Objective, lam_n, sig, bucket: int,
     return solve
 
 
+def _resolve_auto() -> tuple[str, bool]:
+    """("xla"|"pallas", explicit?) for `local_solver="auto"` — explicit
+    when the `$REPRO_LOCAL_SOLVER` hatch forced the choice.  The ONLY
+    parser of the env hatch."""
+    env = os.environ.get("REPRO_LOCAL_SOLVER", "").strip().lower()
+    if env:
+        if env not in ("xla", "pallas"):
+            raise ValueError(
+                f"$REPRO_LOCAL_SOLVER={env!r}: must be 'xla' or 'pallas'")
+        return env, True
+    return ("pallas" if jax.default_backend() == "tpu" else "xla"), False
+
+
 def resolve_auto_solver() -> str:
     """What `local_solver="auto"` means here: "pallas" on TPU backends
     (dense AND sparse — both kernels exist), "xla" everywhere else.
     `$REPRO_LOCAL_SOLVER=xla|pallas` overrides in either direction
     (the escape hatch for unprofiled TPU topologies / forcing the
     interpret-mode kernel on CPU)."""
-    env = os.environ.get("REPRO_LOCAL_SOLVER", "").strip().lower()
-    if env:
-        if env not in ("xla", "pallas"):
-            raise ValueError(
-                f"$REPRO_LOCAL_SOLVER={env!r}: must be 'xla' or 'pallas'")
-        return env
-    return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return _resolve_auto()[0]
+
+
+def _auto_fallback(pallas_solve: LocalSolver, xla_solve: LocalSolver,
+                   misfit: Callable, warn_path: str) -> LocalSolver:
+    """Backend-auto pallas: pre-check the workload's static shapes
+    against the kernel contract at trace time (`misfit(data, v) ->
+    reason | None`) and route misfits to the XLA path instead of
+    raising mid-trace.  Explicit `local_solver="pallas"` (config or
+    $REPRO_LOCAL_SOLVER) skips this and keeps the kernel's actionable
+    errors."""
+    def solve(data, y, a, v):
+        why = misfit(data, v)
+        if why is None:
+            return pallas_solve(data, y, a, v)
+        warnings.warn(
+            f"local_solver='auto': the {warn_path} Pallas kernel "
+            f"cannot run this workload ({why}); using the XLA path "
+            f"instead.  Set $REPRO_LOCAL_SOLVER=pallas to force the "
+            f"kernel and get the full error.", stacklevel=2)
+        return xla_solve(data, y, a, v)
+    return solve
+
+
+def _sparse_auto_fallback(obj: Objective, lam_n, sig, bucket: int,
+                          pallas_solve: LocalSolver) -> LocalSolver:
+    from repro.kernels import ops as kops
+
+    def misfit(data, v):
+        idx, _ = data
+        return kops.sparse_kernel_misfit(
+            idx.shape[-2], idx.shape[-1], v.shape[-1], bucket)
+    return _auto_fallback(pallas_solve, sparse_solver(obj, lam_n, sig),
+                          misfit, "sparse")
+
+
+def _dense_auto_fallback(obj: Objective, lam_n, sig, bucket: int,
+                         pallas_solve: LocalSolver) -> LocalSolver:
+    from repro.kernels import ops as kops
+
+    def misfit(X, v):
+        return kops.dense_kernel_misfit(
+            X.shape[-2], X.shape[-1], bucket)
+    return _auto_fallback(pallas_solve,
+                          dense_xla_solver(obj, lam_n, sig, bucket),
+                          misfit, "dense")
 
 
 def make_local_solver(kind: str, obj: Objective, lam_n, sig, *,
@@ -198,25 +251,47 @@ def make_local_solver(kind: str, obj: Objective, lam_n, sig, *,
     "auto" resolves via `resolve_auto_solver`: "pallas" on TPU backends
     for BOTH the dense and sparse paths, "xla" elsewhere, with
     `$REPRO_LOCAL_SOLVER` as the override.  Unknown kinds are rejected
-    everywhere; "pallas" + feature sharding (model-axis psum) is not
-    supported yet on either path.  `source` labels the data provenance
-    (tile cache vs ad-hoc arrays) in kernel alignment errors.
+    everywhere.  "pallas" + feature sharding (model-axis psum) is not
+    supported yet on either path: a backend-picked "auto" quietly keeps
+    the previously-working "xla" route there, while an explicit request
+    (config or env var) raises.  A backend-picked "auto" likewise
+    falls back to "xla" per-workload (dense AND sparse) when the
+    shapes violate the kernel contract (alignment, bucket cap, VMEM
+    budgets) instead of failing at epoch build.  `source` labels the
+    data provenance (tile cache vs ad-hoc arrays) in kernel alignment
+    errors.
     """
+    auto_pick = False
     if kind == "auto":
-        kind = resolve_auto_solver()
+        # backend-picked only if the env hatch is unset: a user-forced
+        # $REPRO_LOCAL_SOLVER=pallas is an explicit request and keeps
+        # the loud failure modes below.
+        kind, explicit = _resolve_auto()
+        auto_pick = not explicit
     if kind not in ("xla", "pallas"):
         raise ValueError(f"unknown local_solver {kind!r}")
     if kind == "pallas" and model_axis is not None:
-        raise ValueError("local_solver='pallas' does not support "
-                         "feature sharding (model-axis psum) yet")
+        if auto_pick:
+            kind = "xla"
+        else:
+            raise ValueError("local_solver='pallas' does not support "
+                             "feature sharding (model-axis psum) yet")
     if sparse:
         if kind == "pallas":
-            return sparse_pallas_solver(obj, lam_n, sig, bucket,
-                                        interpret=interpret, source=source)
+            pallas = sparse_pallas_solver(obj, lam_n, sig, bucket,
+                                          interpret=interpret,
+                                          source=source)
+            if auto_pick:
+                return _sparse_auto_fallback(obj, lam_n, sig, bucket,
+                                             pallas)
+            return pallas
         return sparse_solver(obj, lam_n, sig)
     if kind == "pallas":
-        return dense_pallas_solver(obj, lam_n, sig, bucket,
-                                   interpret=interpret, source=source)
+        pallas = dense_pallas_solver(obj, lam_n, sig, bucket,
+                                     interpret=interpret, source=source)
+        if auto_pick:
+            return _dense_auto_fallback(obj, lam_n, sig, bucket, pallas)
+        return pallas
     return dense_xla_solver(obj, lam_n, sig, bucket, model_axis=model_axis)
 
 
@@ -771,6 +846,13 @@ class ChunkFeed(Protocol):
     buffering), so implementations must tolerate concurrent reads.
     Implementations live in `repro.data.cache` (`TileFeed` over the
     mmap'd bucket-tile cache, `ArrayFeed` over resident arrays).
+
+    Contract on sparse rows: no feature id may repeat with a NONZERO
+    value within a row (the CSR invariant the sparse Pallas kernel's
+    bitwise guarantee rests on, DESIGN.md S11 — sanitize with
+    `data.formats.zero_duplicates` when building a custom feed; chunks
+    reach the solver inside the jitted step, where values can no
+    longer be checked).
     """
     n: int          # global example count (padded)
     d: int

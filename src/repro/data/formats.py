@@ -28,7 +28,8 @@ import numpy as np
 
 __all__ = [
     "parse_svmlight", "parse_csv", "dump_svmlight", "dump_csv",
-    "to_dense", "zero_duplicates",
+    "to_dense", "nonzero_duplicate_rows", "raise_on_duplicate_nonzeros",
+    "zero_duplicates",
 ]
 
 Source = Union[str, os.PathLike, IO[str], Iterable[str]]
@@ -168,6 +169,46 @@ def to_dense(idx: np.ndarray, val: np.ndarray, d: int) -> np.ndarray:
     cols = np.repeat(np.arange(n), nnz)
     np.add.at(X, (idx.reshape(-1), cols), val.reshape(-1))
     return X
+
+
+def nonzero_duplicate_rows(idx: np.ndarray, val: np.ndarray) -> np.ndarray:
+    """Per-row mask: True where a row repeats a feature id with NONZERO
+    values — the invariant violation `zero_duplicates` sanitizes away
+    and the sparse Pallas kernel's bitwise contract forbids (the
+    kernel wrapper's host-side check shares this helper).
+
+    Zero-valued duplicates (padding, already-sanitized rows) don't
+    count, so zero-valued entries are masked to a sentinel id BEFORE
+    the adjacency compare: a plain duplicate check on sorted ids would
+    miss an A,0,A pattern where a zero-valued duplicate sorts between
+    two nonzero ones.
+    """
+    ids = np.where(val != 0, idx, -1)   # keeps idx's dtype: no copy blowup
+    s = np.sort(ids, axis=1)
+    dup = (s[:, 1:] == s[:, :-1]) & (s[:, 1:] >= 0)
+    return dup.any(axis=1)
+
+
+def raise_on_duplicate_nonzeros(idx: np.ndarray, val: np.ndarray,
+                                context: str) -> None:
+    """Raise the shared CSR-invariant error if `nonzero_duplicate_rows`
+    flags any row.  `context` names the caller's data provenance; the
+    error is THE one message for this contract (kernels.ops and
+    api.session both raise through here — keep it single-sourced).
+    """
+    bad = nonzero_duplicate_rows(idx, val)
+    if not bad.any():
+        return
+    row = int(np.argmax(bad))
+    s = np.sort(np.where(val[row] != 0, idx[row], -1))
+    feat = int(s[1:][(s[1:] == s[:-1]) & (s[1:] >= 0)][0])
+    raise ValueError(
+        f"{context} violate the CSR no-duplicate-nonzero invariant "
+        f"(row {row} repeats feature id {feat} with nonzero values); "
+        f"the sparse Pallas kernel's bitwise-vs-XLA contract does not "
+        f"hold for such rows.  Sanitize with "
+        f"data.formats.zero_duplicates(idx, val) first, or use "
+        f"local_solver='xla'.")
 
 
 def zero_duplicates(idx: np.ndarray, val: np.ndarray) -> np.ndarray:

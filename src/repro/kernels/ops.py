@@ -7,8 +7,11 @@ through the kernel with cfg.use_kernel=True.
 from __future__ import annotations
 
 
+import weakref
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.objectives import Objective
 from . import sdca_bucket, sdca_sparse_bucket, rglru as _rglru
@@ -20,6 +23,120 @@ def _round_up(x: int, m: int) -> int:
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def sparse_kernel_misfit(n_local: int, nnz: int, d: int,
+                         bucket: int) -> str | None:
+    """Why the sparse Pallas kernel CANNOT run this workload, or None.
+
+    Mirrors the wrapper/kernel guards (bucket divisibility, B/nnz
+    sublane alignment, VMEM budgets) on static shapes only, so the
+    engine's backend-picked "auto" path can route misfits to the XLA
+    scan at trace time instead of raising at epoch build.
+    """
+    if bucket <= 0 or n_local % bucket:
+        return f"bucket={bucket} does not divide n_local={n_local}"
+    if bucket % 8 or nnz % 8:
+        return (f"(B={bucket}, nnz={nnz}) must both be multiples of 8 "
+                f"(f32 sublane tile)")
+    d_pad = _round_up(max(d, 8), 8)
+    if d_pad * 4 > sdca_sparse_bucket.V_VMEM_BUDGET_BYTES:
+        return (f"shared vector of d={d} features exceeds the "
+                f"{sdca_sparse_bucket.V_VMEM_BUDGET_BYTES}-byte "
+                f"resident-v VMEM budget")
+    need = sdca_sparse_bucket.vmem_bytes_estimate(bucket, nnz, d_pad)
+    if need > sdca_sparse_bucket.TOTAL_VMEM_BUDGET_BYTES:
+        return (f"~{need}-byte VMEM footprint for (B={bucket}, "
+                f"nnz={nnz}, d_pad={d_pad}) exceeds the "
+                f"{sdca_sparse_bucket.TOTAL_VMEM_BUDGET_BYTES}-byte "
+                f"total budget")
+    return None
+
+
+def dense_kernel_misfit(d: int, n_local: int, bucket: int) -> str | None:
+    """Why the dense Pallas kernel CANNOT run this workload, or None.
+
+    The dense wrapper below zero-pads d and B to sublane multiples, so
+    the only hard misfits are bucket divisibility, the kernel's B cap,
+    and the VMEM footprint of the padded tiles.  Used by the engine's
+    backend-picked "auto" path, like `sparse_kernel_misfit`.
+    """
+    if bucket <= 0 or n_local % bucket:
+        return f"bucket={bucket} does not divide n_local={n_local}"
+    B_pad = _round_up(max(bucket, 8), 8)
+    if B_pad > sdca_bucket.MAX_BUCKET:
+        return (f"bucket={bucket} exceeds the kernel's in-bucket "
+                f"recursion cap of B <= {sdca_bucket.MAX_BUCKET}")
+    d_pad = _round_up(max(d, 8), 8)
+    need = sdca_bucket.vmem_bytes_estimate(B_pad, d_pad)
+    if need > sdca_bucket.TOTAL_VMEM_BUDGET_BYTES:
+        return (f"~{need}-byte VMEM footprint for (B={B_pad}, "
+                f"d_pad={d_pad}) exceeds the "
+                f"{sdca_bucket.TOTAL_VMEM_BUDGET_BYTES}-byte budget")
+    return None
+
+
+# weak-identity memo of (idx, val) pairs that already passed the
+# CSR-invariant check, so eager epoch loops don't re-sort the same
+# chunk every epoch (keyed on BOTH arrays: the invariant depends on
+# the values, not just the ids)
+_csr_checked: dict[tuple[int, int], tuple] = {}
+
+
+def _csr_was_checked(idx, val) -> bool:
+    entry = _csr_checked.get((id(idx), id(val)))
+    return (entry is not None
+            and entry[0]() is idx and entry[1]() is val)
+
+
+def _csr_mark_checked(idx, val) -> None:
+    # only immutable jax.Arrays are safe to memoize by identity —
+    # a numpy array can be mutated in place after passing, which would
+    # silently stale the memo and skip the check forever after
+    if not (isinstance(idx, jax.Array) and isinstance(val, jax.Array)):
+        return
+    key = (id(idx), id(val))
+
+    def drop(_ref, _key=key):
+        _csr_checked.pop(_key, None)
+    try:
+        _csr_checked[key] = (weakref.ref(idx, drop),
+                             weakref.ref(val, drop))
+    except TypeError:
+        pass
+
+
+#: provenances whose rows are vouched for upstream: cache builds run
+#: `zero_duplicates`; array feeds are checked at Session entry
+#: (api/session.py) or built from cached/registry data, and opaque
+#: ChunkFeeds carry the invariant as part of the engine.ChunkFeed
+#: protocol contract; resident shards only reach here as tracers.
+#: Every OTHER label, including relabeled ad-hoc variants, gets
+#: checked: the gate fails safe instead of keying on one magic string.
+_TRUSTED_SOURCES = ("tile cache", "array feed", "resident shard arrays")
+
+
+def _check_csr_invariant(idx, val, source: str) -> None:
+    """Host-side check of the no-duplicate-nonzero CSR invariant.
+
+    Runs on CONCRETE arrays from any untrusted provenance (tracers —
+    i.e. calls from inside jitted epoch programs — are skipped; so are
+    `_TRUSTED_SOURCES`, deduped upstream).  Violations silently break
+    the bitwise-vs-XLA contract, so they get a loud error here.
+    Arrays that pass are memoized by weak identity so eager training
+    loops only pay the device-to-host copy + sort once per chunk, not
+    once per epoch.
+    """
+    if any(source.startswith(s) for s in _TRUSTED_SOURCES):
+        return
+    if isinstance(idx, jax.core.Tracer) or isinstance(val, jax.core.Tracer):
+        return
+    if _csr_was_checked(idx, val):
+        return
+    from repro.data.formats import raise_on_duplicate_nonzeros
+    raise_on_duplicate_nonzeros(np.asarray(idx), np.asarray(val),
+                                f"{source}: sparse rows")
+    _csr_mark_checked(idx, val)
 
 
 def sdca_bucket_subepoch(obj: Objective, Xl, yl, al, v0, lam_n, sig, *,
@@ -79,13 +196,17 @@ def sdca_sparse_bucket_subepoch(obj: Objective, idx, val, yl, al, v0,
     UNSCALED global delta — call-compatible with
     `core.sdca.sparse_local_subepoch` and BITWISE-identical to it for
     rows obeying the CSR no-duplicate-nonzero invariant (see
-    kernels/sdca_sparse_bucket.py).  Unlike the dense wrapper there is
-    no silent B/nnz padding: tile alignment is a data-layout contract
-    (the cache stores tiles pre-aligned) and misalignment raises with
-    the fix spelled out.  Only d is padded (zero rows, never indexed).
+    kernels/sdca_sparse_bucket.py) — concrete ad-hoc arrays are
+    checked host-side here; violating rows must be sanitized with
+    `data.formats.zero_duplicates` first.  Unlike the dense wrapper
+    there is no silent B/nnz padding: tile alignment is a data-layout
+    contract (the cache stores tiles pre-aligned) and misalignment
+    raises with the fix spelled out.  Only d is padded (zero rows,
+    never indexed).
     """
     if interpret is None:
         interpret = _interpret_default()
+    _check_csr_invariant(idx, val, source)
     n_local, nnz = idx.shape
     B = bucket
     if B <= 0 or n_local % B:

@@ -34,6 +34,27 @@ from .pallas_compat import compiler_params as _compiler_params
 
 Array = jax.Array
 
+#: Largest bucket the in-bucket Gram recursion supports (docstring
+#: contract above; beyond this the (B, B) Gram + serial recursion stop
+#: paying for themselves anyway).
+MAX_BUCKET = 512
+
+#: Total VMEM the kernel's buffers may claim together — same budget
+#: discipline as sdca_sparse_bucket.TOTAL_VMEM_BUDGET_BYTES: exceeding
+#: VMEM inside Mosaic is an opaque OOM, not a Python error.
+TOTAL_VMEM_BUDGET_BYTES = 14 * 2 ** 20
+
+
+def vmem_bytes_estimate(B: int, d_pad: int) -> int:
+    """Upper-bound VMEM footprint of one grid step: the resident v,
+    the double-buffered (d_pad, B) bucket tile, and the (B, B) Gram.
+    Shared with `ops.dense_kernel_misfit` so the "auto" path can
+    pre-check static shapes and fall back instead of raising."""
+    v = d_pad * 4
+    tiles = 2 * d_pad * B * 4
+    gram = B * B * 4
+    return v + tiles + gram
+
 
 def _kernel(obj: Objective, x_ref, y_ref, a_ref, scal_ref, v_ref,
             aout_ref, vout_ref):
@@ -100,6 +121,20 @@ def sdca_bucket_kernel(obj: Objective, xb: Array, yb: Array, ab: Array,
             f"aligned bucket size for cached tiles, or route ad-hoc "
             f"arrays through ops.sdca_bucket_subepoch (it zero-pads "
             f"d and B automatically).")
+    if B > MAX_BUCKET:
+        raise ValueError(
+            f"dense bucket tiles from {source} have B={B}; the kernel's "
+            f"in-bucket Gram recursion supports B <= {MAX_BUCKET}.  Use "
+            f"a smaller bucket, or local_solver='xla'.")
+    need = vmem_bytes_estimate(B, d_pad)
+    if need > TOTAL_VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"dense bucket tiles from {source} with (d_pad={d_pad}, "
+            f"B={B}) need ~{need} bytes of VMEM (double-buffered tile "
+            f"+ resident v + Gram), over the kernel's "
+            f"{TOTAL_VMEM_BUDGET_BYTES}-byte total budget.  Use "
+            f"local_solver='xla' (HBM-resident v) for this workload, "
+            f"shard features, or shrink the bucket.")
 
     grid = (nb,)
     a_new, v_fin = pl.pallas_call(

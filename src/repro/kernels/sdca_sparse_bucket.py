@@ -66,6 +66,31 @@ Array = jax.Array
 #: shard features.
 V_VMEM_BUDGET_BYTES = 8 * 2 ** 20
 
+#: Total VMEM the kernel's buffers may claim together (a v5e core has
+#: ~16 MiB; leave headroom for Mosaic spills/scratch).  On wide tiles
+#: the per-coordinate (B, nnz, nnz) match tensor dominates and must be
+#: budgeted up front — exceeding VMEM inside Mosaic is an opaque OOM,
+#: not a Python error.
+TOTAL_VMEM_BUDGET_BYTES = 14 * 2 ** 20
+
+
+def vmem_bytes_estimate(B: int, nnz: int, d_pad: int) -> int:
+    """Upper-bound VMEM footprint of one grid step.
+
+    Counts the resident v, the double-buffered idx(int32)/val(f32)
+    tiles, the W/U/vals/corr working sets, and the per-coordinate
+    (B, nnz, nnz) match tensors — the bool compare mask (1 B/elt) AND
+    the f32 `jnp.where` product (4 B/elt) are live together in the
+    recursion body.  Shared with `ops.sparse_kernel_misfit` so the
+    "auto" path can pre-check static shapes and fall back instead of
+    raising.
+    """
+    v = d_pad * 4
+    tiles = 2 * B * nnz * (4 + 4)
+    work = 4 * B * nnz * 4
+    match = B * nnz * nnz * (4 + 1)
+    return v + tiles + work + match
+
 
 def _kernel(obj: Objective, idx_ref, val_ref, y_ref, a_ref, q_ref,
             scal_ref, v_ref, aout_ref, vout_ref):
@@ -186,6 +211,17 @@ def sdca_sparse_bucket_kernel(obj: Objective, idx: Array, val: Array,
             f"({V_VMEM_BUDGET_BYTES} bytes, ~{V_VMEM_BUDGET_BYTES // 4} "
             f"features).  Use local_solver='xla' (HBM-resident v) for "
             f"this workload, or shard features.")
+    need = vmem_bytes_estimate(B, nnz, d_pad)
+    if need > TOTAL_VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"sparse bucket tiles from {source} with (B={B}, nnz={nnz}, "
+            f"d_pad={d_pad}) need ~{need} bytes of VMEM — the per-"
+            f"coordinate (B, nnz, nnz) match tensor alone is "
+            f"{B * nnz * nnz * 5} bytes (bool mask + f32 product) — "
+            f"over the kernel's "
+            f"{TOTAL_VMEM_BUDGET_BYTES}-byte total budget.  Use "
+            f"local_solver='xla' (HBM-resident v) for this workload, or "
+            f"shrink bucket/nnz so the tiles fit.")
 
     grid = (nb,)
     a_new, v_fin = pl.pallas_call(

@@ -465,6 +465,58 @@ def test_sparse_local_solver_auto_resolves_to_xla(monkeypatch):
         make_local_solver("nope", LOGISTIC, 1.0, 1.0, sparse=True)
 
 
+def test_session_rejects_duplicate_nonzeros_for_pallas(monkeypatch):
+    """Ad-hoc sparse rows that repeat a feature id with NONZERO values
+    are rejected at Session entry when the resolved solver is the
+    Pallas kernel (arrays are still concrete there; inside the jitted
+    epoch they're tracers) — and stay accepted on the XLA scan, which
+    accumulates duplicates fine."""
+    from repro.api import Session
+    from repro.core.config import EngineConfig
+
+    monkeypatch.delenv("REPRO_LOCAL_SOLVER", raising=False)
+    (idx, val), y, d = make_sparse_classification(n=64, d=32, nnz=8,
+                                                  seed=5)
+    bad_idx = np.asarray(idx).copy()
+    bad_val = np.asarray(val).copy()
+    bad_idx[2, 1] = bad_idx[2, 0]
+    bad_val[2, :2] = [0.5, 0.25]
+    cfg = EngineConfig.make(pods=1, lanes=2, bucket=8,
+                            local_solver="pallas")
+    with pytest.raises(ValueError, match="zero_duplicates"):
+        Session(((bad_idx, bad_val), y), objective="logistic", lam=1e-2,
+                d=d, cfg=cfg)
+    # CPU "auto" resolves to xla -> duplicates remain acceptable
+    cfg_auto = EngineConfig.make(pods=1, lanes=2, bucket=8,
+                                 local_solver="auto")
+    Session(((bad_idx, bad_val), y), objective="logistic", lam=1e-2,
+            d=d, cfg=cfg_auto).fit(max_epochs=1)
+    # TPU "auto": enforced when the kernel would run the rows...
+    import jax
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    with pytest.raises(ValueError, match="zero_duplicates"):
+        Session(((bad_idx, bad_val), y), objective="logistic",
+                lam=1e-2, d=d, cfg=cfg_auto)
+    # ...but NOT when the engine's misfit fallback routes the workload
+    # to the XLA scan anyway (nnz=7 breaks the sublane alignment)
+    Session(((bad_idx[:, :7], bad_val[:, :7]), y), objective="logistic",
+            lam=1e-2, d=d, cfg=cfg_auto)
+    # the misfit pre-check must see the RESOLVED bucket: cfg leaves
+    # bucket at the default 1 (which could never fit the kernel) and
+    # the Session kwarg supplies the real, kernel-fitting bucket
+    cfg_nobucket = EngineConfig.make(pods=1, lanes=2,
+                                     local_solver="auto")
+    with pytest.raises(ValueError, match="zero_duplicates"):
+        Session(((bad_idx, bad_val), y), objective="logistic",
+                lam=1e-2, d=d, bucket=8, cfg=cfg_nobucket)
+    # a user-supplied ArrayFeed is checked at Session entry too (the
+    # jitted streamed step only ever sees tracers)
+    from repro.data.cache import ArrayFeed
+    feed = ArrayFeed(y, idx=bad_idx, val=bad_val, d=d, bucket=8)
+    with pytest.raises(ValueError, match="zero_duplicates"):
+        Session(feed, objective="logistic", lam=1e-2, cfg=cfg_auto)
+
+
 # -- bench compare (CI perf-trajectory satellite) ---------------------------
 
 def test_bench_compare_flags_regressions():

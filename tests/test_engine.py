@@ -9,6 +9,7 @@ import subprocess
 import sys
 import textwrap
 
+import jax
 import jax.numpy as jnp
 import pytest
 
@@ -87,6 +88,94 @@ def test_local_solver_registry_guards():
     with pytest.raises(ValueError):
         make_local_solver("nope", LOGISTIC, 1.0, 1.0, bucket=8,
                           sparse=True)
+
+
+def test_local_solver_auto_model_axis_falls_back(monkeypatch):
+    """On TPU hosts a backend-picked "auto" must keep feature-sharded
+    (model-axis) launches on the previously-working xla route; only an
+    EXPLICIT pallas request (config or env var) raises."""
+    monkeypatch.delenv("REPRO_LOCAL_SOLVER", raising=False)
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    # backend-auto + model_axis: silently xla, not a ValueError.  Pin
+    # the actual route via the closure's qualname (the solver can't be
+    # CALLED here — the model-axis psum needs a shard_map context):
+    for sp, xla_route in ((False, "dense_xla_solver"),
+                          (True, "sparse_solver")):
+        solver = make_local_solver("auto", LOGISTIC, 1.0, 1.0, bucket=8,
+                                   sparse=sp, model_axis="model")
+        assert solver.__qualname__.startswith(xla_route)
+    # env-forced pallas is an explicit request: still loud
+    monkeypatch.setenv("REPRO_LOCAL_SOLVER", "pallas")
+    with pytest.raises(ValueError, match="feature sharding"):
+        make_local_solver("auto", LOGISTIC, 1.0, 1.0, bucket=8,
+                          model_axis="model")
+    with pytest.raises(ValueError, match="feature sharding"):
+        make_local_solver("auto", LOGISTIC, 1.0, 1.0, bucket=8,
+                          sparse=True, model_axis="model")
+
+
+def test_local_solver_auto_sparse_workload_fallback(monkeypatch):
+    """Backend-picked sparse "auto" routes kernel-unfit workloads
+    (misaligned tiles, blown VMEM budgets) to the XLA scan at trace
+    time with a warning, instead of raising at epoch build."""
+    import numpy as np
+    from repro.data import make_sparse_classification
+
+    monkeypatch.delenv("REPRO_LOCAL_SOLVER", raising=False)
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    auto = make_local_solver("auto", LOGISTIC, 1.6, 1.0, bucket=8,
+                             sparse=True, interpret=True)
+    xla = make_local_solver("xla", LOGISTIC, 1.6, 1.0, sparse=True)
+    (idx, val), y, d = make_sparse_classification(n=16, d=32, nnz=8,
+                                                  seed=0)
+    # nnz=7 violates the sublane alignment -> falls back, bitwise-xla
+    bad = ((jnp.asarray(idx[:, :7]), jnp.asarray(val[:, :7])),
+           jnp.asarray(y), jnp.zeros(16), jnp.zeros(d))
+    with pytest.warns(UserWarning, match="sparse Pallas"):
+        a1, dv1 = auto(*bad)
+    a2, dv2 = xla(*bad)
+    assert np.array_equal(np.asarray(a1), np.asarray(a2))
+    assert np.array_equal(np.asarray(dv1), np.asarray(dv2))
+    # aligned tiles keep using the kernel (bitwise contract holds)
+    good = ((jnp.asarray(idx), jnp.asarray(val)), jnp.asarray(y),
+            jnp.zeros(16), jnp.zeros(d))
+    a1, dv1 = auto(*good)
+    a2, dv2 = xla(*good)
+    assert np.array_equal(np.asarray(a1), np.asarray(a2))
+    assert np.array_equal(np.asarray(dv1), np.asarray(dv2))
+
+
+def test_local_solver_auto_dense_workload_fallback(monkeypatch):
+    """Backend-picked dense "auto" routes kernel-unfit workloads (here:
+    tiles over the VMEM budget) to the XLA Gram scan at trace time with
+    a warning, and keeps the kernel for fitting ones."""
+    import numpy as np
+
+    monkeypatch.delenv("REPRO_LOCAL_SOLVER", raising=False)
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    rng = np.random.default_rng(0)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], 16).astype(np.float32))
+    a = jnp.zeros(16)
+    auto = make_local_solver("auto", LOGISTIC, 1.6, 1.0, bucket=8,
+                             interpret=True)
+    # d large enough that the double-buffered (d_pad, B) tile blows the
+    # total VMEM budget -> falls back, bitwise-xla
+    d_big = 250_000
+    Xb = jnp.asarray(rng.standard_normal((d_big, 16)).astype(np.float32))
+    xla = make_local_solver("xla", LOGISTIC, 1.6, 1.0, bucket=8)
+    with pytest.warns(UserWarning, match="dense Pallas"):
+        a1, dv1 = auto(Xb, y, a, jnp.zeros(d_big))
+    a2, dv2 = xla(Xb, y, a, jnp.zeros(d_big))
+    assert np.array_equal(np.asarray(a1), np.asarray(a2))
+    assert np.array_equal(np.asarray(dv1), np.asarray(dv2))
+    # a small workload keeps using the kernel (bitwise vs explicit)
+    Xs = jnp.asarray(rng.standard_normal((32, 16)).astype(np.float32))
+    pallas = make_local_solver("pallas", LOGISTIC, 1.6, 1.0, bucket=8,
+                               interpret=True)
+    a1, dv1 = auto(Xs, y, a, jnp.zeros(32))
+    a2, dv2 = pallas(Xs, y, a, jnp.zeros(32))
+    assert np.array_equal(np.asarray(a1), np.asarray(a2))
+    assert np.array_equal(np.asarray(dv1), np.asarray(dv2))
 
 
 def test_local_solver_auto_resolution(monkeypatch):

@@ -243,6 +243,87 @@ def test_sdca_sparse_kernel_vmem_budget_guard():
             jnp.float32(1.0), jnp.float32(1.0), bucket=8, interpret=True)
 
 
+def test_sdca_sparse_kernel_total_vmem_budget_guard():
+    """Wide tiles whose (B, nnz, nnz) match tensor blows the TOTAL VMEM
+    budget get the same actionable ValueError narrow workloads do, not
+    an opaque Mosaic OOM (v alone is tiny here: B=16, nnz=512 puts the
+    match tensor at 16 MiB)."""
+    from repro.kernels.sdca_sparse_bucket import (
+        TOTAL_VMEM_BUDGET_BYTES, vmem_bytes_estimate)
+    B, nnz, d = 16, 512, 64
+    assert vmem_bytes_estimate(B, nnz, 64) > TOTAL_VMEM_BUDGET_BYTES
+    idx = jnp.zeros((B, nnz), jnp.int32)
+    val = jnp.zeros((B, nnz), jnp.float32)
+    y = jnp.ones(B, jnp.float32)
+    a = jnp.zeros(B, jnp.float32)
+    with pytest.raises(ValueError, match="match tensor"):
+        ops.sdca_sparse_bucket_subepoch(
+            LOGISTIC, idx, val, y, a, jnp.zeros(d, jnp.float32),
+            jnp.float32(1.0), jnp.float32(1.0), bucket=B, interpret=True)
+    with pytest.raises(ValueError, match="xla"):
+        ops.sdca_sparse_bucket_subepoch(
+            LOGISTIC, idx, val, y, a, jnp.zeros(d, jnp.float32),
+            jnp.float32(1.0), jnp.float32(1.0), bucket=B, interpret=True)
+
+
+def test_sdca_dense_kernel_bucket_cap_and_vmem_guard():
+    """The dense kernel enforces its documented B <= 512 cap and a
+    total-VMEM budget (tile + resident v + Gram) with actionable
+    errors instead of an opaque Mosaic OOM."""
+    from repro.kernels.sdca_bucket import (MAX_BUCKET,
+                                           TOTAL_VMEM_BUDGET_BYTES,
+                                           vmem_bytes_estimate)
+    one = jnp.float32(1.0)
+    B = MAX_BUCKET + 8
+    with pytest.raises(ValueError, match=str(MAX_BUCKET)):
+        ops.sdca_bucket_subepoch(
+            LOGISTIC, jnp.zeros((8, B)), jnp.ones(B), jnp.zeros(B),
+            jnp.zeros(8), one, one, bucket=B, interpret=True)
+    # tall tiles: d_pad * B over the total budget even at B = 512
+    d = 4096
+    assert vmem_bytes_estimate(MAX_BUCKET, d) > TOTAL_VMEM_BUDGET_BYTES
+    with pytest.raises(ValueError, match="xla"):
+        ops.sdca_bucket_subepoch(
+            LOGISTIC, jnp.zeros((d, MAX_BUCKET)), jnp.ones(MAX_BUCKET),
+            jnp.zeros(MAX_BUCKET), jnp.zeros(d), one, one,
+            bucket=MAX_BUCKET, interpret=True)
+
+
+def test_sdca_sparse_kernel_rejects_duplicate_nonzeros():
+    """Concrete ad-hoc rows repeating a feature id with NONZERO values
+    break the bitwise-vs-XLA contract silently — they must be rejected
+    with a pointer at formats.zero_duplicates.  Zero-valued duplicates
+    (padding, sanitized rows) stay accepted."""
+    idx, val, y, a, v0 = _sparse_data(LOGISTIC, 8, 32, 8, seed=2)
+    bad_idx = np.asarray(idx).copy()
+    bad_val = np.asarray(val).copy()
+    bad_idx[3, 1] = bad_idx[3, 0]            # duplicate feature id...
+    bad_val[3, 0] = 0.5
+    bad_val[3, 1] = 0.25                     # ...both values nonzero
+    with pytest.raises(ValueError, match="zero_duplicates"):
+        ops.sdca_sparse_bucket_subepoch(
+            LOGISTIC, jnp.asarray(bad_idx), jnp.asarray(bad_val), y, a,
+            v0, jnp.float32(1.0), jnp.float32(1.0), bucket=8,
+            interpret=True)
+    # a zero-valued duplicate BETWEEN two nonzero duplicates of the
+    # same id must not mask the violation (value order A, 0, A after
+    # the stable sort defeats a naive adjacent-pair check)
+    tri_idx = np.asarray(idx).copy()
+    tri_val = np.asarray(val).copy()
+    tri_idx[5, :3] = 7
+    tri_val[5, :3] = [1.0, 0.0, 2.0]
+    with pytest.raises(ValueError, match="zero_duplicates"):
+        ops.sdca_sparse_bucket_subepoch(
+            LOGISTIC, jnp.asarray(tri_idx), jnp.asarray(tri_val), y, a,
+            v0, jnp.float32(1.0), jnp.float32(1.0), bucket=8,
+            interpret=True)
+    # sanitizing the same rows makes them acceptable again
+    ok_val = zero_duplicates(bad_idx, bad_val)
+    ops.sdca_sparse_bucket_subepoch(
+        LOGISTIC, jnp.asarray(bad_idx), jnp.asarray(ok_val), y, a, v0,
+        jnp.float32(1.0), jnp.float32(1.0), bucket=8, interpret=True)
+
+
 def test_sdca_sparse_kernel_bitwise_property():
     """Hypothesis sweep: bitwise equality with the scan across random
     shapes, objectives, scalings, and warm dual starts."""
