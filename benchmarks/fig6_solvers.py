@@ -19,6 +19,11 @@ and a bytes-from-HBM-per-epoch model (the quantity the VMEM-resident
 kernel exists to cut; DESIGN.md S11) — into the BENCH json.  On CPU
 the Pallas arm runs in interpret mode, so treat its wall clock as a
 smoke signal; the HBM-bytes column is the architecture-level claim.
+
+The feature-sharded arm (`sdca_sharded_*`, webspam-shaped synthetic
+with d past the replicated kernel's resident-v VMEM budget) races the
+sharded-v kernel against the slice-masked XLA scan over a model-axis
+mesh (DESIGN.md S12); it needs >= 2 devices and self-skips otherwise.
 """
 from __future__ import annotations
 
@@ -102,6 +107,96 @@ def _sparse_rows(quick: bool) -> list[dict]:
     return rows
 
 
+# -- feature-sharded sparse arm: webspam-shape d on a model-axis mesh -------
+
+SHARDED_D = 2_101_248        # past the replicated kernel's resident-v
+                             # VMEM budget (2_097_152 f32 rows), so only
+                             # the sharded kernel or the scan can run it
+SHARDED_NNZ = 64             # webspam's offline fallback row width
+SHARDED_N = 128
+SHARDED_LANES = 2            # model-axis lanes
+
+
+def _sharded_hbm_bytes(n: int, nnz: int, d: int, M: int,
+                       solver: str) -> float:
+    """Per-device HBM bytes/epoch for the feature-sharded arms (model).
+
+    Every model lane streams the full (n, nnz) idx/val rows (the data
+    is replicated over the model axis).  The sharded Pallas kernel
+    keeps only its d/M slice resident: per bucket it round-trips the
+    slice (in + out — the per-bucket pallas_call boundary forces a
+    full-block DMA, unlike the replicated kernel's grid-resident v)
+    and receives the all-gathered (M, B, nnz) f32 working set; the
+    full v crosses HBM once per chunk sync.  The slice-masked XLA scan
+    pays the HBM-resident-v gather/scatter exactly like the unsharded
+    scan, plus the same syncs.  At bench scale the slice round-trip
+    dominates, so the sharded kernel's bytes column exceeds the scan's
+    — the column is here to make that cost structure visible, not to
+    flatter the kernel; its win is VMEM-resident compute (examples/s
+    on real TPUs) on shapes the replicated kernel cannot run AT ALL.
+    """
+    from repro.kernels.ops import sparse_slice_width
+    data = n * nnz * 8
+    sync = SPARSE_CHUNKS * d * 4 * 2
+    if solver == "pallas":
+        d_loc = sparse_slice_width(d, M)
+        nb = n // SPARSE_BUCKET
+        return float(data + nb * d_loc * 4 * 2
+                     + nb * M * SPARSE_BUCKET * nnz * 4 + sync)
+    return float(data + n * nnz * 4 * 3 + sync)
+
+
+def _sharded_sparse_rows(quick: bool) -> list[dict]:
+    """Race the feature-sharded sparse kernel vs the slice-masked XLA
+    scan on a webspam-shaped synthetic (d past the replicated kernel's
+    resident-v budget) over a (data=1, model=2) mesh.  Needs >= 2
+    devices — the bench-smoke CI job forces host devices; runs with
+    fewer skip the arm (compare.py's workload-version gate keeps such
+    runs from being diffed against 2-device baselines)."""
+    import jax
+    from repro.data import make_sparse_classification
+    from repro.launch.glm import GLMScale, make_sparse_epoch
+    from repro.launch.mesh import make_host_mesh
+
+    if jax.device_count() < SHARDED_LANES:
+        print(f"# fig6 sharded arm skipped: "
+              f"{jax.device_count()} device(s) < {SHARDED_LANES}")
+        return []
+    epochs = 1 if quick else 2
+    n, d, nnz = SHARDED_N, SHARDED_D, SHARDED_NNZ
+    (idx, val), y, _ = make_sparse_classification(n=n, d=d, nnz=nnz,
+                                                  seed=6)
+    idx, val, y = (jnp.asarray(t) for t in (idx, val, y))
+    mesh = make_host_mesh(pod=1, data=1, model=SHARDED_LANES)
+    rows = []
+    for solver in ("xla", "pallas"):
+        sc = GLMScale("webspam-sharded", "sparse", n=n, d=d, nnz=nnz,
+                      bucket=SPARSE_BUCKET, chunks=SPARSE_CHUNKS,
+                      lam=LAM, compress_pod=False, deterministic=True,
+                      local_solver=solver, feature_shard=True)
+        with mesh:
+            ep = jax.jit(make_sparse_epoch(sc, mesh))
+            jax.block_until_ready(                         # warm the jit
+                ep(idx, val, y, jnp.zeros(n), jnp.zeros(d), jnp.int32(0)))
+            st = (idx, val, y, jnp.zeros(n), jnp.zeros(d))
+            t0 = time.perf_counter()
+            for e in range(epochs):
+                st = ep(*st, jnp.int32(e))
+            jax.block_until_ready(st)
+            wall = time.perf_counter() - t0
+        v = st[4]
+        rows.append(dict(
+            bench="fig6", dataset="webspam-sharded",
+            solver=f"sdca_sharded_{solver}", wall_s=wall,
+            primal=float(jnp.mean(LOGISTIC.loss(margins(v, (idx, val)),
+                                                y))
+                         + LAM / 2 * jnp.vdot(v, v)),
+            examples_per_s=n * epochs / wall,
+            hbm_bytes_epoch=_sharded_hbm_bytes(n, nnz, d, SHARDED_LANES,
+                                               solver)))
+    return rows
+
+
 def run(quick: bool = False):
     rows = []
     names = ["epsilon"] if quick else ["higgs", "epsilon"]
@@ -180,6 +275,7 @@ def run(quick: bool = False):
                              speedup_vs_lbfgs=results["lbfgs"][0] / wall,
                              **parity.get(solver, {})))
     rows.extend(_sparse_rows(quick))
+    rows.extend(_sharded_sparse_rows(quick))
     return emit(rows, HEADER)
 
 

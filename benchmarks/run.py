@@ -24,7 +24,8 @@ from . import (fig1_wild_convergence, fig2_scaling_partitions,
 # so intentional changes reset the perf baseline instead of tripping
 # the >20% regression gate.  v2: fig3/fig6 sklearn+estimator arms.
 # v3: fig6 sparse xla-vs-pallas arms + deduped synthetic sparse rows.
-WORKLOAD_VERSION = 3
+# v4: fig6 feature-sharded sparse arm (webspam-shaped, model-axis mesh).
+WORKLOAD_VERSION = 4
 
 BENCHES = [
     ("fig1_wild_convergence", fig1_wild_convergence),

@@ -217,7 +217,8 @@ class Session:
             else:
                 feed = ArrayFeed(y, X=X, bucket=B)
             self._init_from_feed(feed, objective=self.obj, lam=self.lam,
-                                 jit_step=jit_step, rows_checked=True)
+                                 jit_step=jit_step, rows_checked=True,
+                                 lam_scaled=True)
             return
 
         if sparse:
@@ -255,6 +256,13 @@ class Session:
                          jit_step) -> None:
         meta = cache.meta
         self._resolve_obj(objective, lam, default_obj=meta.objective)
+        if meta.n > meta.n_examples:
+            # cache tiles arrive PRE-padded (pad=False / feed below), so
+            # `_init_from_arrays`' padded-objective lam rescale never
+            # fires on this path — apply the same n_examples/n factor
+            # here so the inert rows keep the user's argmin exactly
+            # (see _init_from_arrays' docstring for the algebra)
+            self.lam *= meta.n_examples / meta.n
         algo = self.spec.algo
         if algo.bucket not in (0, 1, meta.bucket):
             raise ValueError(
@@ -277,10 +285,11 @@ class Session:
         self.streamed = True
         self._init_from_feed(cache.feed(), objective=self.obj,
                              lam=self.lam, jit_step=jit_step,
-                             rows_checked=True)
+                             rows_checked=True, lam_scaled=True)
 
     def _init_from_feed(self, feed, *, objective, lam, jit_step,
-                        rows_checked: bool = False) -> None:
+                        rows_checked: bool = False,
+                        lam_scaled: bool = False) -> None:
         self._resolve_obj(objective, lam)
         self.feed = feed
         self.streamed = True
@@ -301,6 +310,11 @@ class Session:
         src_cache = getattr(feed, "cache", None)
         if src_cache is not None:
             self.n_examples = src_cache.meta.n_examples
+            if not lam_scaled and self.n > self.n_examples:
+                # a cache-backed feed handed to Session directly:
+                # same padded-objective lam rescale as _init_from_cache
+                # (which passes lam_scaled=True to not apply it twice)
+                self.lam *= self.n_examples / self.n
         elif not hasattr(self, "n_examples"):
             self.n_examples = self.n
         algo, dep = self.spec.algo, self.spec.deployment

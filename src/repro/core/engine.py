@@ -174,6 +174,54 @@ def sparse_pallas_solver(obj: Objective, lam_n, sig, bucket: int,
     return solve
 
 
+def sparse_sharded_pallas_solver(obj: Objective, lam_n, sig, bucket: int,
+                                 model_axis: str, model_lanes: int,
+                                 interpret: Optional[bool] = None,
+                                 source: str = "ad-hoc arrays"
+                                 ) -> LocalSolver:
+    """Feature-sharded sparse kernel: each `model_axis` lane owns a
+    d/model_lanes slice of v and the per-bucket working-set exchange
+    happens inside the sub-epoch (kernels/ops.py, DESIGN.md S12).  dv
+    has support only on the lane's slice, so the engine's ordered sync
+    over the model axis reassembles the serial dv bitwise."""
+    from repro.kernels import ops as kops
+
+    def solve(data, y, a, v):
+        idx, val = data
+        return kops.sdca_sparse_sharded_subepoch(
+            obj, idx, val, y, a, v, jnp.asarray(lam_n, val.dtype),
+            jnp.asarray(sig, val.dtype), bucket=bucket,
+            model_axis=model_axis, model_lanes=model_lanes,
+            interpret=interpret, source=source)
+    return solve
+
+
+def sparse_sharded_xla_solver(obj: Objective, lam_n, sig,
+                              model_axis: str, model_lanes: int
+                              ) -> LocalSolver:
+    """The sharded kernel's XLA twin on the SAME feature-sharded
+    layout: run the full HBM-resident scan, then zero dv outside this
+    lane's slice (`kops.sparse_slice_width` — the kernel's exact
+    partition).  Masking is bitwise-free (kept entries are untouched,
+    dropped entries are exact zeros), and without it every lane would
+    contribute the FULL dv and the model-axis sync would count it
+    `model_lanes` times."""
+    from repro.kernels import ops as kops
+
+    def solve(data, y, a, v):
+        idx, val = data
+        a_new, dv = sdca.sparse_local_subepoch(
+            obj, idx, val, y, a, v, jnp.asarray(lam_n, val.dtype),
+            jnp.asarray(sig, val.dtype))
+        d_loc = kops.sparse_slice_width(v.shape[-1], model_lanes)
+        lo = jax.lax.axis_index(model_axis).astype(jnp.int32) \
+            * jnp.int32(d_loc)
+        j = jnp.arange(v.shape[-1], dtype=jnp.int32)
+        own = jnp.logical_and(j >= lo, j < lo + d_loc)
+        return a_new, jnp.where(own, dv, jnp.zeros((), dv.dtype))
+    return solve
+
+
 def _resolve_auto() -> tuple[str, bool]:
     """("xla"|"pallas", explicit?) for `local_solver="auto"` — explicit
     when the `$REPRO_LOCAL_SOLVER` hatch forced the choice.  The ONLY
@@ -229,6 +277,27 @@ def _sparse_auto_fallback(obj: Objective, lam_n, sig, bucket: int,
                           misfit, "sparse")
 
 
+def _sparse_sharded_auto_fallback(obj: Objective, lam_n, sig, bucket: int,
+                                  model_axis: str, model_lanes: int,
+                                  pallas_solve: LocalSolver) -> LocalSolver:
+    """Sharded-layout twin of `_sparse_auto_fallback`: the misfit check
+    carries `model_lanes` (sharded feasibility) and the fallback is the
+    slice-MASKED scan — the layout already commits every lane to owning
+    only its dv slice."""
+    from repro.kernels import ops as kops
+
+    def misfit(data, v):
+        idx, _ = data
+        return kops.sparse_kernel_misfit(
+            idx.shape[-2], idx.shape[-1], v.shape[-1], bucket,
+            model_lanes=model_lanes)
+    return _auto_fallback(
+        pallas_solve,
+        sparse_sharded_xla_solver(obj, lam_n, sig, model_axis,
+                                  model_lanes),
+        misfit, "feature-sharded sparse")
+
+
 def _dense_auto_fallback(obj: Objective, lam_n, sig, bucket: int,
                          pallas_solve: LocalSolver) -> LocalSolver:
     from repro.kernels import ops as kops
@@ -244,6 +313,7 @@ def _dense_auto_fallback(obj: Objective, lam_n, sig, bucket: int,
 def make_local_solver(kind: str, obj: Objective, lam_n, sig, *,
                       bucket: int = 1, sparse: bool = False,
                       model_axis: Optional[str] = None,
+                      model_lanes: Optional[int] = None,
                       interpret: Optional[bool] = None,
                       source: str = "ad-hoc arrays") -> LocalSolver:
     """Resolve an `AlgoConfig.local_solver` name to a LocalSolver.
@@ -251,15 +321,24 @@ def make_local_solver(kind: str, obj: Objective, lam_n, sig, *,
     "auto" resolves via `resolve_auto_solver`: "pallas" on TPU backends
     for BOTH the dense and sparse paths, "xla" elsewhere, with
     `$REPRO_LOCAL_SOLVER` as the override.  Unknown kinds are rejected
-    everywhere.  "pallas" + feature sharding (model-axis psum) is not
-    supported yet on either path: a backend-picked "auto" quietly keeps
-    the previously-working "xla" route there, while an explicit request
-    (config or env var) raises.  A backend-picked "auto" likewise
-    falls back to "xla" per-workload (dense AND sparse) when the
-    shapes violate the kernel contract (alignment, bucket cap, VMEM
-    budgets) instead of failing at epoch build.  `source` labels the
-    data provenance (tile cache vs ad-hoc arrays) in kernel alignment
-    errors.
+    everywhere.
+
+    Feature sharding: `model_axis` + `model_lanes` on the SPARSE path
+    select the sharded-v layout (DESIGN.md S12) — "pallas" runs the
+    model-axis sharded kernel, "xla" the slice-masked scan, and a
+    backend-picked "auto" wraps the kernel with a sharded-feasibility
+    check (`kops.sparse_kernel_misfit(..., model_lanes=...)`) that
+    falls back to the masked scan.  Dense feature sharding (model-axis
+    psum inside the sub-epoch) still has no kernel, as does the legacy
+    sparse layout that passes `model_axis` WITHOUT `model_lanes` (the
+    model axis as an example axis): a backend-picked "auto" quietly
+    keeps the previously-working "xla" route there, while an explicit
+    pallas request (config or env var) raises.  A backend-picked
+    "auto" likewise falls back to "xla" per-workload (dense AND
+    sparse) when the shapes violate the kernel contract (alignment,
+    bucket cap, VMEM budgets) instead of failing at epoch build.
+    `source` labels the data provenance (tile cache vs ad-hoc arrays)
+    in kernel alignment errors.
     """
     auto_pick = False
     if kind == "auto":
@@ -270,13 +349,30 @@ def make_local_solver(kind: str, obj: Objective, lam_n, sig, *,
         auto_pick = not explicit
     if kind not in ("xla", "pallas"):
         raise ValueError(f"unknown local_solver {kind!r}")
-    if kind == "pallas" and model_axis is not None:
+    sharded_sparse = (sparse and model_axis is not None
+                      and model_lanes is not None)
+    if kind == "pallas" and model_axis is not None and not sharded_sparse:
         if auto_pick:
             kind = "xla"
         else:
-            raise ValueError("local_solver='pallas' does not support "
-                             "feature sharding (model-axis psum) yet")
+            raise ValueError(
+                "local_solver='pallas' does not support feature "
+                "sharding (model-axis psum) on this path yet"
+                + ("; pass model_lanes=... to route the sparse path "
+                   "through the sharded-v kernel" if sparse else ""))
     if sparse:
+        if sharded_sparse:
+            if kind == "pallas":
+                pallas = sparse_sharded_pallas_solver(
+                    obj, lam_n, sig, bucket, model_axis, model_lanes,
+                    interpret=interpret, source=source)
+                if auto_pick:
+                    return _sparse_sharded_auto_fallback(
+                        obj, lam_n, sig, bucket, model_axis,
+                        model_lanes, pallas)
+                return pallas
+            return sparse_sharded_xla_solver(obj, lam_n, sig,
+                                             model_axis, model_lanes)
         if kind == "pallas":
             pallas = sparse_pallas_solver(obj, lam_n, sig, bucket,
                                           interpret=interpret,
@@ -709,20 +805,25 @@ def sharded_epoch(
     n_total: int,
     workers: int,
     model_axis: Optional[str] = None,
+    model_lanes: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> tuple[Block, Array, Array, Array]:
     """Epoch over a *physically partitioned* workload (the distributed
     layout): partition != 'static' re-deals buckets across lanes, the
     visit order is a fresh per-worker shuffle.  Works with either
     collectives backend — this is the program the sim<->mesh
-    equivalence test runs on both."""
+    equivalence test runs on both.  `model_axis` + `model_lanes` on a
+    sparse block select the feature-sharded solver layout (the model
+    axis carries v slices and joins the sync axes instead of the
+    example axes — launch/glm.py wires both ends)."""
     algo = spec.algo
     lam_n = lam * n_total
     sig = spec.sigma_prime(workers)
     solver = make_local_solver(
         algo.local_solver, obj, lam_n, sig, bucket=algo.bucket,
         sparse=isinstance(block, SparseBlock), model_axis=model_axis,
-        interpret=interpret, source="resident shard arrays")
+        model_lanes=model_lanes, interpret=interpret,
+        source="resident shard arrays")
     dv_scale = (1.0 / workers if algo.aggregation == "averaging" else 1.0)
     return run_epoch(
         coll, solver, algo, block, y, a, v, epoch,

@@ -272,6 +272,46 @@ class TileCache:
             lead + (nb * m.bucket, m.nnz))
         return (idx, val), y
 
+    def slice_gather(self, bids: np.ndarray, lo: int, hi: int, *,
+                     nnz_multiple: int = 8):
+        """Gather sparse bucket tiles compacted to a feature slice [lo, hi).
+
+        Building block for streamed feature-sharded feeds (DESIGN.md
+        S12): a model-axis lane that owns rows [lo, hi) of the shared
+        vector only needs the nonzeros landing in its slice.  Entries
+        with ``lo <= idx < hi`` are kept in row order, rebased to
+        slice-local coordinates (idx - lo), and right-padded with inert
+        idx=0/val=0 columns to a common width ceiled to
+        ``nnz_multiple`` (the sparse Pallas kernels' lane alignment).
+        Returns ``((idx_loc, val_loc), y)`` with idx/val shaped
+        (*lead, nb*B, w).  Not wired into training yet — the in-memory
+        sharded path reads full rows and masks inside the gather
+        kernel instead (kernels/sdca_sparse_bucket.py).
+        """
+        m = self.meta
+        if m.kind != "sparse":
+            raise ValueError("slice_gather is sparse-only")
+        if not 0 <= lo < hi:
+            raise ValueError(f"bad feature slice [{lo}, {hi})")
+        (idx, val), y = self.gather_buckets(bids)
+        own = (idx >= lo) & (idx < hi) & (val != 0)
+        # stable left-compaction: sort each row by (not owned) so owned
+        # entries keep their relative order — the kernel's bitwise
+        # contract depends on within-row summation order.
+        order = np.argsort(~own, axis=-1, kind="stable")
+        idx_s = np.take_along_axis(idx, order, axis=-1)
+        val_s = np.take_along_axis(val, order, axis=-1)
+        own_s = np.take_along_axis(own, order, axis=-1)
+        w = _ceil_to(max(int(own.sum(axis=-1).max(initial=0)), 1),
+                     nnz_multiple)
+        idx_s = np.where(own_s, idx_s - lo, 0).astype(np.int32)
+        val_s = np.where(own_s, val_s, 0.0).astype(np.float32)
+        if w > idx_s.shape[-1]:       # raw caches with unaligned nnz
+            pad = [(0, 0)] * (idx_s.ndim - 1) + [(0, w - idx_s.shape[-1])]
+            idx_s, val_s = np.pad(idx_s, pad), np.pad(val_s, pad)
+        return ((np.ascontiguousarray(idx_s[..., :w]),
+                 np.ascontiguousarray(val_s[..., :w])), y)
+
     def feed(self) -> "TileFeed":
         return TileFeed(self)
 

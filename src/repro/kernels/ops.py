@@ -25,32 +25,84 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def sparse_kernel_misfit(n_local: int, nnz: int, d: int,
-                         bucket: int) -> str | None:
-    """Why the sparse Pallas kernel CANNOT run this workload, or None.
+def sparse_slice_width(d: int, model_lanes: int) -> int:
+    """Per-lane slice width d_loc of the feature-sharded sparse kernel.
 
-    Mirrors the wrapper/kernel guards (bucket divisibility, B/nnz
-    sublane alignment, VMEM budgets) on static shapes only, so the
-    engine's backend-picked "auto" path can route misfits to the XLA
-    scan at trace time instead of raising at epoch build.
+    The ONE formula shared by the kernel driver
+    (`sdca_sparse_sharded_subepoch`), the masked XLA twin
+    (`engine.sparse_sharded_xla_solver`), and the analytic cost models:
+    ceil(d_pad / M) rounded up to the f32 sublane tile.  Slices are
+    contiguous, disjoint, and cover [0, d) because d_loc * M >= d_pad.
+    """
+    d_pad = _round_up(max(d, 8), 8)
+    M = max(int(model_lanes), 1)
+    return _round_up(-(-d_pad // M), 8)
+
+
+def sparse_solver_plan(n_local: int, nnz: int, d: int, bucket: int, *,
+                       model_lanes: int = 1) -> tuple[str, str | None]:
+    """Data-parallel vs feature-parallel selection on static shapes.
+
+    -> (route, reason): route is one of "pallas-replicated" (whole v in
+    VMEM — the PR-4 kernel), "pallas-sharded" (each of `model_lanes`
+    lanes owns a d/M slice of v), or "xla" (HBM-resident v scan), with
+    `reason` the misfit string for "xla" routes and None otherwise.
+    Prefers replicated (no per-bucket exchange) when v fits, mirroring
+    LightGBM's data-parallel vs feature-parallel decision by
+    #feature/#data shape (SNIPPETS.md Snippet 3) with VMEM budgets as
+    the thresholds.  Mirrors the wrapper/kernel guards (bucket
+    divisibility, B/nnz sublane alignment, VMEM budgets) so the
+    engine's backend-picked "auto" path and launch/glm.py's layout
+    default can route misfits at trace time instead of raising.
     """
     if bucket <= 0 or n_local % bucket:
-        return f"bucket={bucket} does not divide n_local={n_local}"
+        return "xla", f"bucket={bucket} does not divide n_local={n_local}"
     if bucket % 8 or nnz % 8:
-        return (f"(B={bucket}, nnz={nnz}) must both be multiples of 8 "
-                f"(f32 sublane tile)")
+        return "xla", (f"(B={bucket}, nnz={nnz}) must both be multiples "
+                       f"of 8 (f32 sublane tile)")
     d_pad = _round_up(max(d, 8), 8)
+    M = max(int(model_lanes), 1)
+    if (d_pad * 4 <= sdca_sparse_bucket.V_VMEM_BUDGET_BYTES
+            and sdca_sparse_bucket.vmem_bytes_estimate(bucket, nnz, d_pad)
+            <= sdca_sparse_bucket.TOTAL_VMEM_BUDGET_BYTES):
+        return "pallas-replicated", None
+    if M > 1:
+        d_loc = sparse_slice_width(d, M)
+        if (d_loc * 4 <= sdca_sparse_bucket.V_VMEM_BUDGET_BYTES
+                and sdca_sparse_bucket.vmem_bytes_estimate_sharded(
+                    bucket, nnz, d_loc)
+                <= sdca_sparse_bucket.TOTAL_VMEM_BUDGET_BYTES):
+            return "pallas-sharded", None
     if d_pad * 4 > sdca_sparse_bucket.V_VMEM_BUDGET_BYTES:
-        return (f"shared vector of d={d} features exceeds the "
-                f"{sdca_sparse_bucket.V_VMEM_BUDGET_BYTES}-byte "
-                f"resident-v VMEM budget")
-    need = sdca_sparse_bucket.vmem_bytes_estimate(bucket, nnz, d_pad)
-    if need > sdca_sparse_bucket.TOTAL_VMEM_BUDGET_BYTES:
-        return (f"~{need}-byte VMEM footprint for (B={bucket}, "
-                f"nnz={nnz}, d_pad={d_pad}) exceeds the "
-                f"{sdca_sparse_bucket.TOTAL_VMEM_BUDGET_BYTES}-byte "
-                f"total budget")
-    return None
+        reason = (f"shared vector of d={d} features exceeds the "
+                  f"{sdca_sparse_bucket.V_VMEM_BUDGET_BYTES}-byte "
+                  f"resident-v VMEM budget")
+        if M > 1:
+            reason += (f" (and its d/{M} model-axis slice does not fit "
+                       f"the sharded kernel either)")
+    else:
+        need = sdca_sparse_bucket.vmem_bytes_estimate(bucket, nnz, d_pad)
+        reason = (f"~{need}-byte VMEM footprint for (B={bucket}, "
+                  f"nnz={nnz}, d_pad={d_pad}) exceeds the "
+                  f"{sdca_sparse_bucket.TOTAL_VMEM_BUDGET_BYTES}-byte "
+                  f"total budget")
+    return "xla", reason
+
+
+def sparse_kernel_misfit(n_local: int, nnz: int, d: int, bucket: int,
+                         model_lanes: int = 1) -> str | None:
+    """Why NO sparse Pallas kernel can run this workload, or None.
+
+    The boolean view of `sparse_solver_plan`: None when either the
+    replicated or (given `model_lanes` > 1) the sharded kernel fits —
+    replicated-feasible shapes are always sharded-feasible too, the
+    slice and its single-buffered tiles never outgrow the replicated
+    footprint — so callers on a feature-sharded layout can use it as a
+    sharded-feasibility verdict directly.
+    """
+    route, reason = sparse_solver_plan(n_local, nnz, d, bucket,
+                                       model_lanes=model_lanes)
+    return reason if route == "xla" else None
 
 
 def dense_kernel_misfit(d: int, n_local: int, bucket: int) -> str | None:
@@ -235,6 +287,97 @@ def sdca_sparse_bucket_subepoch(obj: Objective, idx, val, yl, al, v0,
     a_out = a_new.reshape(-1)
     dv = (v_fin[:d, 0] - v0.astype(jnp.float32)) / jnp.float32(sig)
     return a_out.astype(al.dtype), dv.astype(v0.dtype)
+
+
+def sdca_sparse_sharded_subepoch(obj: Objective, idx, val, yl, al, v0,
+                                 lam_n, sig, *, bucket: int,
+                                 model_axis: str | None = None,
+                                 model_lanes: int = 1,
+                                 lane=None,
+                                 interpret: bool | None = None,
+                                 source: str = "ad-hoc arrays"):
+    """One LANE's feature-sharded sparse sub-epoch (DESIGN.md S12).
+
+    Call-compatible with `sdca_sparse_bucket_subepoch` plus the model-
+    axis knobs: v0 is the (d,) REPLICATED shared vector, but this lane
+    keeps only its contiguous `sparse_slice_width(d, model_lanes)` rows
+    resident (in VMEM on TPU) and, per bucket, (1) gathers its partial
+    working set, (2) all-gathers the partials over `model_axis` and
+    keeps the owning lane's bits per entry — pure data movement, so the
+    assembled W is BITWISE the replicated kernel's W; a psum of partial
+    margins would reorder the sums and break the contract — then
+    (3) runs the shared in-bucket recursion and scatters its owned
+    entries.  Returns (a_new, dv) with dv the UNSCALED global delta
+    whose support is ONLY this lane's slice: the engine's ordered
+    model-axis dv sync adds the disjoint slices (plus exact zeros)
+    back into the serial dv, entry for entry.
+
+    With model_axis=None the exchange is the identity and `lane`
+    (default 0) picks the slice — the single-process form the kernel
+    tests drive lane by lane.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    _check_csr_invariant(idx, val, source)
+    n_local, nnz = idx.shape
+    B = bucket
+    if B <= 0 or n_local % B:
+        raise ValueError(
+            f"bucket={B} must divide the {source} chunk's row count "
+            f"{n_local} (the engine hands the kernel whole buckets)")
+    d = v0.shape[0]
+    M = max(int(model_lanes), 1)
+    d_loc = sparse_slice_width(d, M)
+    d_pad = d_loc * M
+    nb = n_local // B
+
+    if model_axis is not None:
+        lane_ix = jax.lax.axis_index(model_axis).astype(jnp.int32)
+    else:
+        lane_ix = jnp.int32(0 if lane is None else lane)
+    lo0 = lane_ix * jnp.int32(d_loc)
+
+    idxb = idx.reshape(nb, B, nnz)
+    valb = val.reshape(nb, B, nnz)
+    yb = yl.reshape(nb, B)
+    ab = al.reshape(nb, B)
+    # per-row curvature at FULL chunk shape — bitwise-load-bearing,
+    # exactly as in the replicated wrapper (and replicated over lanes:
+    # every lane sees the same q bits the scan uses)
+    valf = val.astype(jnp.float32)
+    qb = jnp.sum(valf * valf, axis=1).reshape(nb, B)
+    v_pad = jnp.zeros((d_pad, 1), jnp.float32).at[:d, 0].set(
+        v0.astype(jnp.float32))
+    v_loc0 = jax.lax.dynamic_slice(v_pad, (lo0, 0), (d_loc, 1))
+    scal = jnp.stack([jnp.float32(lam_n), jnp.float32(sig)])
+
+    # lo rides in the scan carry: shard_map treats closed-over
+    # axis_index-derived values inside loops as loop-invariant-
+    # replicated on current jax (see engine.run_epoch's unrolled chunk
+    # loop) — carrying it through keeps every lane on its own slice.
+    def step(carry, tile):
+        v_loc, lo = carry
+        idx_t, val_t, y_t, a_t, q_t = tile
+        w_loc = sdca_sparse_bucket.sdca_sparse_gather_bucket(
+            idx_t, v_loc, lo, interpret, source)
+        if model_axis is not None and M > 1:
+            gathered = jax.lax.all_gather(w_loc, model_axis)  # (M, B, nnz)
+            owner = (idx_t // jnp.int32(d_loc)).astype(jnp.int32)
+            w = jnp.take_along_axis(gathered, owner[None], axis=0)[0]
+        else:
+            w = w_loc
+        a_new_t, v_loc = sdca_sparse_bucket.sdca_sparse_sharded_bucket(
+            obj, idx_t, val_t, y_t, a_t, q_t, w, v_loc, scal, lo,
+            interpret, source)
+        return (v_loc, lo), a_new_t
+
+    (v_fin, _), a_new = jax.lax.scan(
+        step, (v_loc0, lo0), (idxb, valb, yb, ab, qb))
+
+    dv_loc = (v_fin[:, 0] - v_loc0[:, 0]) / jnp.float32(sig)
+    dv = jax.lax.dynamic_update_slice(
+        jnp.zeros((d_pad,), jnp.float32), dv_loc, (lo0,))[:d]
+    return a_new.reshape(-1).astype(al.dtype), dv.astype(v0.dtype)
 
 
 def rglru_scan(x, a_log, gate_a, gate_x, h0, *, block_t: int = 128,

@@ -1,6 +1,6 @@
-"""Pallas TPU kernel: one worker's SPARSE bucketed SDCA sub-epoch.
+"""Pallas TPU kernels: one worker's SPARSE bucketed SDCA sub-epoch.
 
-The sparse twin of kernels/sdca_bucket.py (DESIGN.md S11).  The XLA
+The sparse twin of kernels/sdca_bucket.py (DESIGN.md S11/S12).  The XLA
 formulation (`core.sdca.sparse_local_subepoch`) is a per-coordinate
 `lax.scan` whose carry is the FULL shared vector v: every coordinate
 pays a v-sized gather + scatter through HBM.  Here the paper's
@@ -45,6 +45,28 @@ are processed IN ORDER (sequential SDCA semantics).
 Alignment: B and nnz must be multiples of 8 (f32 sublane tile), d_pad
 a multiple of 8, and v must fit the VMEM budget below.  Scalars
 (lam*n, sigma') ride in SMEM.
+
+Feature-sharded variant (DESIGN.md S12): when d_pad rows of v cannot
+fit one core's VMEM budget, each `model`-axis lane owns ONE contiguous
+d_loc = roundup(ceil(d_pad / M), 8) slice of v instead.  The sub-epoch
+becomes a per-bucket pair of kernels around one model-axis exchange:
+
+  * `_gather_slice_kernel`: gather the bucket's touched rows that fall
+    in this lane's slice (out-of-slice entries read as exact 0.0);
+  * the ENGINE all-gathers the per-lane partial working sets and each
+    lane keeps, entry for entry, the owning lane's bits
+    (`ops.sdca_sparse_sharded_subepoch`) — pure data movement, so the
+    assembled W is bitwise the replicated kernel's W.  A psum of
+    per-lane partial margins would be cheaper on the wire but changes
+    the summation order and breaks the bitwise-vs-scan contract;
+  * `_sharded_kernel`: run the SAME in-bucket recursion
+    (`_bucket_recursion`, shared code) on the assembled W — every lane
+    redundantly, O(B*nnz) VPU work — then scatter only the owned
+    entries back into the slice, in visiting order.
+
+One exchange (M*B*nnz f32) per bucket is the whole model-axis wire
+cost, amortized over B coordinates — the bucket optimization's payoff
+on this axis too.
 """
 from __future__ import annotations
 
@@ -92,46 +114,58 @@ def vmem_bytes_estimate(B: int, nnz: int, d_pad: int) -> int:
     return v + tiles + work + match
 
 
-def _kernel(obj: Objective, idx_ref, val_ref, y_ref, a_ref, q_ref,
-            scal_ref, v_ref, aout_ref, vout_ref):
-    """Body for one bucket (one grid step)."""
-    first = pl.program_id(0) == 0
+def vmem_bytes_estimate_sharded(B: int, nnz: int, d_loc: int) -> int:
+    """Upper-bound VMEM footprint of ONE bucket of the sharded pair.
 
-    # v lives in the aliased output block; seed it from the input once.
-    @pl.when(first)
-    def _():
-        vout_ref[...] = v_ref[...]
+    The update kernel dominates: the resident v SLICE, one (not
+    double-buffered — one bucket per call) idx/val tile pair, the
+    exchanged working set W, the U/vals/corr working sets, and the same
+    (B, nnz, nnz) match tensors as the replicated kernel.  Shared with
+    `ops.sparse_solver_plan` so the dispatcher can pre-check the
+    sharded route on static shapes.
+    """
+    v = d_loc * 4
+    tiles = B * nnz * (4 + 4)
+    wexch = B * nnz * 4
+    work = 4 * B * nnz * 4
+    match = B * nnz * nnz * (4 + 1)
+    return v + tiles + wexch + work + match
 
-    idx = idx_ref[0]                            # (B, nnz) int32
-    vals = val_ref[0].astype(jnp.float32)       # (B, nnz)
-    y = y_ref[0].astype(jnp.float32)            # (B,)
-    a0 = a_ref[0].astype(jnp.float32)           # (B,)
-    # per-row curvature ||x_i||^2, PRECOMPUTED by the wrapper with the
-    # scan's exact whole-array row-sum: recomputing it per tile inside
-    # the kernel lets XLA vectorize the reduction differently and
-    # drifts q by 1 ulp on some rows, which the bisection amplifies —
-    # the bitwise contract dies there (found the hard way).
-    qrow = q_ref[0].astype(jnp.float32)         # (B,)
-    lam_n = scal_ref[0]
-    sig = scal_ref[1]
+
+def _gather_rows(idx, read):
+    """W[i, k] = read(idx[i, k]) via a scalar loop over the tile.
+
+    Shared by the replicated kernel (read = v lookup) and the sharded
+    gather kernel (read = masked slice lookup): the loop structure must
+    stay identical so both produce the same W bits for owned entries.
+    """
     B, nnz = idx.shape
 
-    # 1. bucket entry: gather the touched rows into the working set
-    #    W[i, k] = v[idx[i, k]]  (the only reads of v this bucket)
     def gather(t, W):
         i = t // nnz
         k = t - i * nnz
         p = jax.lax.dynamic_slice(idx, (i, k), (1, 1))[0, 0]
-        w = vout_ref[p, 0]
+        w = read(p)
         return jax.lax.dynamic_update_slice(W, w[None, None], (i, k))
 
-    W = jax.lax.fori_loop(0, B * nnz, gather,
-                          jnp.zeros((B, nnz), jnp.float32))
+    return jax.lax.fori_loop(0, B * nnz, gather,
+                             jnp.zeros((B, nnz), jnp.float32))
 
-    # 2. in-bucket recursion entirely on VMEM-resident state.  After
-    #    coordinate i, later rows' working-set entries that alias a
-    #    feature i touched receive the SAME u-element the scan
-    #    scatter-adds into v, so margins stay bit-equal.
+
+def _bucket_recursion(obj: Objective, idx, vals, y, a0, qrow, lam_n, sig,
+                      W):
+    """The in-bucket delta recursion on a gathered working set W.
+
+    -> (U, deltas): the per-coordinate update rows (computed ONCE each,
+    see the module docstring's bitwise contract) and the alpha deltas.
+    Shared VERBATIM by the replicated and sharded kernels — the sharded
+    path's bitwise claim is exactly "same W bits in, same U bits out".
+    After coordinate i, later rows' working-set entries that alias a
+    feature i touched receive the SAME u-element the scan scatter-adds
+    into v, so margins stay bit-equal.
+    """
+    B, nnz = idx.shape
+
     def body(i, carry):
         W, U, deltas = carry
         vi = jax.lax.dynamic_slice_in_dim(vals, i, 1, 0)[0]    # (nnz,)
@@ -155,6 +189,40 @@ def _kernel(obj: Objective, idx_ref, val_ref, y_ref, a_ref, q_ref,
     _, U, deltas = jax.lax.fori_loop(
         0, B, body, (W, jnp.zeros((B, nnz), jnp.float32),
                      jnp.zeros((B,), jnp.float32)))
+    return U, deltas
+
+
+def _kernel(obj: Objective, idx_ref, val_ref, y_ref, a_ref, q_ref,
+            scal_ref, v_ref, aout_ref, vout_ref):
+    """Body for one bucket (one grid step) — replicated v."""
+    first = pl.program_id(0) == 0
+
+    # v lives in the aliased output block; seed it from the input once.
+    @pl.when(first)
+    def _():
+        vout_ref[...] = v_ref[...]
+
+    idx = idx_ref[0]                            # (B, nnz) int32
+    vals = val_ref[0].astype(jnp.float32)       # (B, nnz)
+    y = y_ref[0].astype(jnp.float32)            # (B,)
+    a0 = a_ref[0].astype(jnp.float32)           # (B,)
+    # per-row curvature ||x_i||^2, PRECOMPUTED by the wrapper with the
+    # scan's exact whole-array row-sum: recomputing it per tile inside
+    # the kernel lets XLA vectorize the reduction differently and
+    # drifts q by 1 ulp on some rows, which the bisection amplifies —
+    # the bitwise contract dies there (found the hard way).
+    qrow = q_ref[0].astype(jnp.float32)         # (B,)
+    lam_n = scal_ref[0]
+    sig = scal_ref[1]
+    B, nnz = idx.shape
+
+    # 1. bucket entry: gather the touched rows into the working set
+    #    W[i, k] = v[idx[i, k]]  (the only reads of v this bucket)
+    W = _gather_rows(idx, lambda p: vout_ref[p, 0])
+
+    # 2. in-bucket recursion entirely on VMEM-resident state
+    U, deltas = _bucket_recursion(obj, idx, vals, y, a0, qrow, lam_n,
+                                  sig, W)
 
     # 3. scatter back into v ONCE per bucket, rows in visiting order so
     #    shared features accumulate in the scan's sequence
@@ -250,3 +318,180 @@ def sdca_sparse_bucket_kernel(obj: Objective, idx: Array, val: Array,
         interpret=interpret,
     )(idx, val, yb, ab, qb, scal, v0)
     return a_new, v_fin
+
+
+# ---------------------------------------------------------------------------
+# Feature-sharded (model-axis) variant: per-bucket kernel pair around one
+# engine-side exchange (see module docstring + DESIGN.md S12).  Driven by
+# ops.sdca_sparse_sharded_subepoch, which owns the bucket scan and the
+# all-gather/owner-select exchange between the two calls.
+# ---------------------------------------------------------------------------
+
+
+def _gather_slice_kernel(idx_ref, lo_ref, v_ref, w_ref):
+    """W_loc[i, k] = v_slice[idx[i, k] - lo] when owned, else exact 0.0.
+
+    The masked read keeps the owned entries' bits identical to the
+    replicated kernel's gather; unowned entries are filled by the
+    owning lane after the exchange.
+    """
+    idx = idx_ref[...]                          # (B, nnz) int32
+    lo = lo_ref[0]
+    d_loc = v_ref.shape[0]
+
+    def read(p):
+        q = p - lo
+        ok = jnp.logical_and(q >= 0, q < d_loc)
+        qc = jnp.where(ok, q, 0)
+        return jnp.where(ok, v_ref[qc, 0], jnp.float32(0.0))
+
+    w_ref[...] = _gather_rows(idx, read)
+
+
+def _sharded_kernel(obj: Objective, idx_ref, val_ref, y_ref, a_ref,
+                    q_ref, w_ref, scal_ref, lo_ref, v_ref, aout_ref,
+                    vout_ref):
+    """One bucket's recursion + owned-slice scatter, given the
+    EXCHANGED working set W (full bits on every lane)."""
+    vout_ref[...] = v_ref[...]
+    idx = idx_ref[...]                          # (B, nnz) int32
+    vals = val_ref[...].astype(jnp.float32)     # (B, nnz)
+    y = y_ref[0].astype(jnp.float32)            # (B,)
+    a0 = a_ref[0].astype(jnp.float32)           # (B,)
+    qrow = q_ref[0].astype(jnp.float32)         # (B,)
+    W = w_ref[...].astype(jnp.float32)          # (B, nnz)
+    lam_n = scal_ref[0]
+    sig = scal_ref[1]
+    lo = lo_ref[0]
+    B, nnz = idx.shape
+    d_loc = v_ref.shape[0]
+
+    # every lane runs the full recursion on the same W bits (redundant
+    # O(B*nnz) VPU work — the price of one exchange per bucket)
+    U, deltas = _bucket_recursion(obj, idx, vals, y, a0, qrow, lam_n,
+                                  sig, W)
+
+    # scatter the OWNED entries in visiting order; unowned writes put
+    # the unchanged bits back (no FP op), so each v row accumulates its
+    # hits in exactly the replicated kernel's sequence on its one owner
+    def scatter(t, carry):
+        i = t // nnz
+        k = t - i * nnz
+        p = jax.lax.dynamic_slice(idx, (i, k), (1, 1))[0, 0] - lo
+        ok = jnp.logical_and(p >= 0, p < d_loc)
+        pc = jnp.where(ok, p, 0)
+        u = jax.lax.dynamic_slice(U, (i, k), (1, 1))[0, 0]
+        cur = vout_ref[pc, 0]
+        vout_ref[pc, 0] = jnp.where(ok, cur + u, cur)
+        return carry
+
+    jax.lax.fori_loop(0, B * nnz, scatter, 0)
+    aout_ref[0] = (a0 + deltas).astype(aout_ref.dtype)
+
+
+def _check_sharded_tile(B: int, nnz: int, d_loc: int, source: str):
+    if B % 8 or nnz % 8:
+        raise ValueError(
+            f"sparse bucket tiles from {source} have (B={B}, nnz={nnz}); "
+            f"the sharded Pallas kernel needs both to be multiples of 8 "
+            f"(f32 sublane tile) — rebuild the tile cache with "
+            f"nnz_multiple=8 or zero-pad ad-hoc idx/val arrays.")
+    if d_loc % 8:
+        raise ValueError(
+            f"v slice from {source} has d_loc={d_loc}, which must be a "
+            f"multiple of 8 (ops.sdca_sparse_sharded_subepoch sizes "
+            f"slices to the sublane tile automatically)")
+    if d_loc * 4 > V_VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"per-lane v slice of d_loc={d_loc} rows ({d_loc * 4} bytes) "
+            f"exceeds the sparse kernel's VMEM budget "
+            f"({V_VMEM_BUDGET_BYTES} bytes) even feature-sharded.  Add "
+            f"model-axis lanes or use local_solver='xla' "
+            f"(HBM-resident v).")
+    need = vmem_bytes_estimate_sharded(B, nnz, d_loc)
+    if need > TOTAL_VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"sharded sparse bucket tiles from {source} with (B={B}, "
+            f"nnz={nnz}, d_loc={d_loc}) need ~{need} bytes of VMEM — "
+            f"the per-coordinate (B, nnz, nnz) match tensor alone is "
+            f"{B * nnz * nnz * 5} bytes — over the kernel's "
+            f"{TOTAL_VMEM_BUDGET_BYTES}-byte total budget.  Use "
+            f"local_solver='xla' for this workload, or shrink "
+            f"bucket/nnz so the tiles fit.")
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4))
+def sdca_sparse_gather_bucket(idx_t: Array, v_loc: Array, lo: Array,
+                              interpret: bool = False,
+                              source: str = "ad-hoc arrays") -> Array:
+    """Gather ONE bucket's per-lane partial working set.
+
+    idx_t: (B, nnz) int32 feature ids; v_loc: (d_loc, 1) f32 this
+    lane's v slice; lo: () int32 the slice's first global row.  Returns
+    W_loc (B, nnz) f32 with this lane's rows and exact zeros elsewhere.
+    """
+    B, nnz = idx_t.shape
+    d_loc = v_loc.shape[0]
+    _check_sharded_tile(B, nnz, d_loc, source)
+    return pl.pallas_call(
+        _gather_slice_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((B, nnz), lambda i: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((d_loc, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((B, nnz), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nnz), jnp.float32),
+        compiler_params=_compiler_params(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(idx_t, lo.astype(jnp.int32).reshape(1), v_loc)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 10, 11))
+def sdca_sparse_sharded_bucket(obj: Objective, idx_t: Array, val_t: Array,
+                               y_t: Array, a_t: Array, q_t: Array,
+                               W: Array, v_loc: Array, scal: Array,
+                               lo: Array, interpret: bool = False,
+                               source: str = "ad-hoc arrays"
+                               ) -> tuple[Array, Array]:
+    """Run ONE bucket's recursion + owned scatter on the v slice.
+
+    idx_t/val_t: (B, nnz); y_t/a_t/q_t: (B,); W: (B, nnz) the EXCHANGED
+    full working set (every lane the same bits); v_loc: (d_loc, 1) this
+    lane's slice (aliased into the output); scal: (2,) [lam*n, sigma'];
+    lo: () int32.  Returns (a_new (B,), v_loc_new (d_loc, 1)).
+    """
+    B, nnz = idx_t.shape
+    d_loc = v_loc.shape[0]
+    _check_sharded_tile(B, nnz, d_loc, source)
+    a_new, v_fin = pl.pallas_call(
+        functools.partial(_sharded_kernel, obj),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((B, nnz), lambda i: (0, 0)),
+            pl.BlockSpec((B, nnz), lambda i: (0, 0)),
+            pl.BlockSpec((1, B), lambda i: (0, 0)),
+            pl.BlockSpec((1, B), lambda i: (0, 0)),
+            pl.BlockSpec((1, B), lambda i: (0, 0)),
+            pl.BlockSpec((B, nnz), lambda i: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((d_loc, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, B), lambda i: (0, 0)),
+            pl.BlockSpec((d_loc, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, B), a_t.dtype),
+            jax.ShapeDtypeStruct((d_loc, 1), jnp.float32),
+        ],
+        input_output_aliases={8: 1},   # v slice reused as output
+        compiler_params=_compiler_params(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(idx_t, val_t, y_t[None], a_t[None], q_t[None], W, scal,
+      lo.astype(jnp.int32).reshape(1), v_loc)
+    return a_new[0], v_fin

@@ -14,9 +14,14 @@ this module only binds it to a mesh:
     balanced all-to-all over 'data' (`MeshCollectives.redeal`); a ring
     rotation of whole blocks was tried first and REFUTED — see
     core/partition.py + EXPERIMENTS.md;
-  * feature sharding over 'model' (TP) for wide datasets — per-bucket
-    Gram/margin partial sums are psum'd, amortizing ONE model-axis
-    collective over B coordinates (the bucket optimization's TP payoff);
+  * feature sharding over 'model' (TP) for wide datasets — dense: v
+    rows are sharded and per-bucket Gram/margin partial sums are
+    psum'd; sparse: each model lane owns a contiguous d/M slice of v
+    (VMEM-resident in the sharded Pallas kernel, DESIGN.md S12), one
+    working-set exchange per bucket, and the model axis joins the dv
+    SYNC axes so the ordered reduction reassembles the slices — in
+    both cases ONE model-axis collective amortized over B coordinates
+    (the bucket optimization's TP payoff);
   * v replicas sync over 'data' once per chunk, so compute and the
     data-axis reduction interleave across chunks.
 
@@ -70,7 +75,8 @@ class GLMScale:
     nnz: int = 0              # sparse only (padded)
     bucket: int = 16
     chunks: int = 4           # v syncs per epoch over 'data'
-    feature_shard: bool = False   # wide dense data: shard d over 'model'
+    feature_shard: bool = False   # wide data: shard d over 'model'
+    #   (dense: TP v rows + psum; sparse: sharded-v solver slices)
     lam: float = 1e-3
     compress_pod: bool = True     # int8 EF for the cross-pod reduce
     compress_sync: bool = False   # int8 two-phase data-axis dv reduction
@@ -114,6 +120,13 @@ GLM_CONFIGS = {
     # epsilon: 400k examples, 2000 dense features — wide: TP over 'model'
     "glm-epsilon": GLMScale("glm-epsilon", "dense", n=409_600, d=2_000,
                             bucket=16, chunks=8, feature_shard=True),
+    # webspam-trigram: 350k examples, 16.6M features, ~3727 nnz — d is
+    # ~8x over the replicated-v VMEM budget, so this is THE
+    # feature-sharded sparse workload: model lanes each hold a d/M
+    # slice of v and run the sharded bucket kernel (DESIGN.md S12)
+    "glm-webspam": GLMScale("glm-webspam", "sparse", n=360_448,
+                            d=16_609_280, nnz=3_728, bucket=16,
+                            chunks=4, feature_shard=True),
     # beyond-paper optimized variant (SPerf glm iteration): int8
     # two-phase chunk reductions + 25% partial re-deal
     "glm-criteo-opt": GLMScale("glm-criteo-opt", "sparse", n=45_088_768,
@@ -129,9 +142,13 @@ def scale_for_dataset(name: str, **overrides) -> GLMScale:
     sub-samples): n is padded to a 32k multiple and d/nnz to mesh- and
     tile-friendly multiples, mirroring how the hand-written GLM_CONFIGS
     entries were derived from the paper's tables.  Wide dense datasets
-    (d >= 512) default to feature sharding over 'model'.
+    (d >= 512) default to feature sharding over 'model'; sparse
+    datasets default to it exactly when the replicated shared vector
+    cannot fit the kernel's VMEM budget (webspam-scale d) — the same
+    boundary `kernels.ops.sparse_solver_plan` dispatches on.
     """
     from repro.data.registry import get_spec
+    from repro.kernels.sdca_sparse_bucket import V_VMEM_BUDGET_BYTES
 
     spec = get_spec(name)
     n = -(-spec.full_n // 32_768) * 32_768
@@ -141,6 +158,7 @@ def scale_for_dataset(name: str, **overrides) -> GLMScale:
               lam=spec.lam)
     if spec.kind == "sparse":
         kw["nnz"] = -(-spec.nnz // 8) * 8
+        kw["feature_shard"] = (-(-d // 8) * 8) * 4 > V_VMEM_BUDGET_BYTES
     else:
         kw["feature_shard"] = spec.full_d >= 512
     kw.update(overrides)
@@ -215,13 +233,27 @@ def estimator_epoch(est, mesh, **overrides):
 
 
 def _axes(mesh, scale: GLMScale):
-    """-> (example_axes, sync_axes, has_pod, model_is_tp)."""
+    """-> (example_axes, sync_axes, has_pod, model_is_tp).
+
+    feature_shard picks the model axis's ROLE.  Dense TP shards the v
+    rows themselves (P("model") specs, tp=True).  Sparse feature
+    sharding keeps v replicated at the XLA level, but each model lane's
+    SOLVER only writes its contiguous d/M slice (sharded kernel /
+    masked scan), so 'model' leaves the example axes and joins the
+    SYNC axes: the ordered dv reduction reassembles the disjoint
+    slices.  Without feature_shard the model axis is just more
+    example-parallel workers.
+    """
     names = mesh.axis_names
     has_pod = "pod" in names
-    if scale.kind == "dense" and scale.feature_shard:
+    if scale.feature_shard:
         ex = tuple(a for a in ("pod", "data") if a in names)
-        sync = ("data",)
-        tp = True
+        if scale.kind == "dense":
+            sync = ("data",)
+            tp = True
+        else:
+            sync = tuple(a for a in ("data", "model") if a in names)
+            tp = False
     else:
         ex = tuple(a for a in ("pod", "data", "model") if a in names)
         sync = tuple(a for a in ("data", "model") if a in names)
@@ -273,17 +305,28 @@ def make_dense_epoch(scale: GLMScale, mesh, obj: Objective = LOGISTIC):
         out_specs=(x_spec, e_spec, e_spec, v_spec))
 
 
-def make_sparse_epoch(scale: GLMScale, mesh, obj: Objective = LOGISTIC):
+def make_sparse_epoch(scale: GLMScale, mesh, obj: Objective = LOGISTIC,
+                      *, interpret: bool | None = None):
+    """`interpret` forces the Pallas kernels' interpret mode (tests
+    drive TPU-targeted solver selection on CPU hosts with it); None =
+    backend default."""
     ex_axes, _, _, _ = _axes(mesh, scale)
     W = _worker_count(mesh, scale)
     spec = scale.engine_config(mesh)
     coll = _collectives(mesh, scale)
+    sparse_tp = scale.feature_shard and "model" in mesh.axis_names
+    model_axis = "model" if sparse_tp else None
+    model_lanes = mesh.shape["model"] if sparse_tp else None
 
     def epoch_fn(idx, val, y, a, v, epoch):
-        # idx/val: (n_local, nnz); v: (d,) replicated (gather/scatter)
+        # idx/val: (n_local, nnz); v: (d,) replicated at the XLA level
+        # even when feature-sharded — each lane's solver writes only
+        # its own d/M slice and the model-axis sync reassembles them
         blk, y, a, v = engine.sharded_epoch(
             obj, spec, coll, engine.SparseBlock(idx, val), y, a, v,
-            epoch, lam=scale.lam, n_total=scale.n, workers=W)
+            epoch, lam=scale.lam, n_total=scale.n, workers=W,
+            model_axis=model_axis, model_lanes=model_lanes,
+            interpret=interpret)
         return blk.idx, blk.val, y, a, v
 
     r_spec = P(ex_axes, None)
@@ -373,6 +416,11 @@ def glm_analytic(scale: GLMScale, mesh) -> dict:
     dv_len = scale.d if scale.kind == "sparse" else d_loc
     coll = scale.chunks * dv_len * sync_bytes * len(sync_axes)
     coll += (x_bytes + n_local * 4 * 2) * scale.redeal_frac
+    if scale.kind == "sparse" and scale.feature_shard:
+        # sharded-v solver: one working-set all-gather per bucket over
+        # 'model' — (M, B, nnz) f32 landing on every lane
+        M = mesh.shape.get("model", 1)
+        coll += (n_local // B) * M * B * scale.nnz * 4
     if has_pod:
         coll += (scale.d if scale.kind == "sparse" else d_loc) * 1 * \
             mesh.shape.get("pod", 1)               # int8 payload gather

@@ -73,10 +73,15 @@ def test_engine_config_passthrough_everywhere():
 # -- local solver registry --------------------------------------------------
 
 def test_local_solver_registry_guards():
-    # sparse + pallas is a real solver now (PR 4); feature sharding is
-    # still unsupported on either pallas path, unknown kinds rejected
+    # sparse + pallas is a real solver now (PR 4), and WITH model_lanes
+    # the feature-sharded sparse kernel is too (PR 6); a model_axis
+    # without model_lanes still means the legacy TP layout, which no
+    # pallas path supports, and unknown kinds are rejected
     assert callable(make_local_solver("pallas", LOGISTIC, 1.0, 1.0,
                                       bucket=8, sparse=True))
+    assert callable(make_local_solver("pallas", LOGISTIC, 1.0, 1.0,
+                                      bucket=8, sparse=True,
+                                      model_axis="model", model_lanes=2))
     with pytest.raises(ValueError):
         make_local_solver("pallas", LOGISTIC, 1.0, 1.0, bucket=8,
                           model_axis="model")
@@ -91,9 +96,11 @@ def test_local_solver_registry_guards():
 
 
 def test_local_solver_auto_model_axis_falls_back(monkeypatch):
-    """On TPU hosts a backend-picked "auto" must keep feature-sharded
-    (model-axis) launches on the previously-working xla route; only an
-    EXPLICIT pallas request (config or env var) raises."""
+    """On TPU hosts a backend-picked "auto" must keep LEGACY
+    feature-sharded (model-axis without model_lanes) launches on the
+    previously-working xla route; only an EXPLICIT pallas request
+    (config or env var) raises.  With model_lanes the sparse path has a
+    real sharded kernel now (PR 6) and routes there instead."""
     monkeypatch.delenv("REPRO_LOCAL_SOLVER", raising=False)
     monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
     # backend-auto + model_axis: silently xla, not a ValueError.  Pin
@@ -104,7 +111,18 @@ def test_local_solver_auto_model_axis_falls_back(monkeypatch):
         solver = make_local_solver("auto", LOGISTIC, 1.0, 1.0, bucket=8,
                                    sparse=sp, model_axis="model")
         assert solver.__qualname__.startswith(xla_route)
-    # env-forced pallas is an explicit request: still loud
+    # sparse + model_lanes: the sharded-v solver exists, so auto keeps
+    # the pallas choice (wrapped in the trace-time misfit fallback)
+    assert callable(make_local_solver("auto", LOGISTIC, 1.0, 1.0,
+                                      bucket=8, sparse=True,
+                                      model_axis="model", model_lanes=2))
+    # the explicit xla twin on the sharded layout masks dv to its slice
+    solver = make_local_solver("xla", LOGISTIC, 1.0, 1.0, bucket=8,
+                               sparse=True, model_axis="model",
+                               model_lanes=2)
+    assert solver.__qualname__.startswith("sparse_sharded_xla_solver")
+    # env-forced pallas is an explicit request: still loud on the
+    # legacy (no-model_lanes) layouts
     monkeypatch.setenv("REPRO_LOCAL_SOLVER", "pallas")
     with pytest.raises(ValueError, match="feature sharding"):
         make_local_solver("auto", LOGISTIC, 1.0, 1.0, bucket=8,
@@ -409,6 +427,142 @@ def test_sparse_pallas_local_solver_on_mesh_path():
         assert np.abs(outs["pallas"][4]).max() > 0
         print("OK")
     """)
+    assert "OK" in r.stdout, r.stdout + r.stderr
+
+
+# -- feature-sharded sparse dispatch + mesh path (PR 6, DESIGN.md S12) ------
+
+@pytest.mark.parametrize("n_local,nnz,d,B,M,route,reason_part", [
+    # small d: whole v fits in VMEM — data-parallel replicated kernel,
+    # regardless of how many model lanes the mesh has
+    (64, 8, 4_096, 8, 1, "pallas-replicated", None),
+    (64, 8, 4_096, 8, 4, "pallas-replicated", None),
+    # exact VMEM boundary row: d_pad * 4 == V_VMEM_BUDGET_BYTES still
+    # fits the replicated kernel (budget is inclusive)
+    (64, 8, 2_097_152, 8, 1, "pallas-replicated", None),
+    (64, 8, 2_097_152, 8, 4, "pallas-replicated", None),
+    # one sublane past the boundary: replicated is out; a 2-lane mesh
+    # puts it on the sharded kernel, a 1-lane mesh falls back to xla
+    (64, 8, 2_097_160, 8, 1, "xla", "resident-v"),
+    (64, 8, 2_097_160, 8, 2, "pallas-sharded", None),
+    # 4x the boundary: even the d/2 slice is too wide, but d/8 fits
+    (64, 8, 8_388_608, 8, 2, "xla", "slice does not fit"),
+    (64, 8, 8_388_608, 8, 8, "pallas-sharded", None),
+    # alignment and divisibility misfits beat everything
+    (64, 7, 4_096, 8, 4, "xla", "multiples of 8"),
+    (12, 8, 4_096, 8, 4, "xla", "divide"),
+    # wide rows: the (B, nnz, nnz) match tensor blows the TOTAL budget
+    # for replicated AND sharded alike — sharding v doesn't shrink it
+    (64, 512, 4_096, 16, 2, "xla", "total budget"),
+])
+def test_sparse_solver_plan_decision_table(n_local, nnz, d, B, M, route,
+                                           reason_part):
+    """The data-parallel vs feature-parallel dispatcher picks the
+    documented route on shape corners, VMEM boundary rows included
+    (LightGBM-style selection table — SNIPPETS.md Snippet 3)."""
+    from repro.kernels import ops as kops
+    got_route, got_reason = kops.sparse_solver_plan(
+        n_local, nnz, d, B, model_lanes=M)
+    assert got_route == route
+    if reason_part is None:
+        assert got_reason is None
+        # misfit agrees: some kernel fits
+        assert kops.sparse_kernel_misfit(n_local, nnz, d, B,
+                                         model_lanes=M) is None
+    else:
+        assert reason_part in got_reason
+        assert kops.sparse_kernel_misfit(
+            n_local, nnz, d, B, model_lanes=M) == got_reason
+
+
+def test_sparse_sharded_pallas_on_mesh_bitwise():
+    """Feature-sharded sparse `local_solver='pallas'` through
+    launch/glm.py on a 2x2 (data x model) mesh is BITWISE-identical to
+    the slice-masked XLA scan on the same layout (deterministic
+    collectives; interpret-mode kernels on CPU).  d=250 exercises
+    uneven slices + sublane padding."""
+    r = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.glm import GLMScale, make_sparse_epoch
+        from repro.launch.mesh import make_host_mesh
+        from repro.data import make_sparse_classification
+
+        n, d, nnz = 256, 250, 8
+        (idx, val), y, _ = make_sparse_classification(n=n, d=d, nnz=nnz,
+                                                      seed=2)
+        idx, val, y = (jnp.asarray(t) for t in (idx, val, y))
+        a0, v0 = jnp.zeros(n), jnp.zeros(d)
+        mesh = make_host_mesh(pod=1, data=2, model=2)
+        outs = {}
+        for solver in ("xla", "pallas"):
+            sc = GLMScale("s", "sparse", n=n, d=d, nnz=nnz, bucket=8,
+                          chunks=2, lam=1e-2, compress_pod=False,
+                          deterministic=True, local_solver=solver,
+                          feature_shard=True)
+            with mesh:
+                ep = jax.jit(make_sparse_epoch(sc, mesh, interpret=True))
+                st = (idx, val, y, a0, v0)
+                for e in range(2):
+                    st = ep(*st, jnp.int32(e))
+            outs[solver] = [np.asarray(t) for t in st]
+        for xa, pa in zip(outs["xla"], outs["pallas"]):
+            assert np.array_equal(xa, pa)
+        assert np.abs(outs["pallas"][4]).max() > 0
+        print("OK")
+    """)
+    assert "OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_sparse_sharded_auto_acceptance_webspam_scale():
+    """The PR-6 acceptance pin: a workload whose d exceeds the
+    replicated kernel's resident-v VMEM budget trains through the
+    feature-sharded sparse Pallas path on a model-axis mesh, bitwise
+    equal to the XLA scan under deterministic=True, with
+    local_solver='auto' selecting it WITHOUT env overrides (backend
+    patched to 'tpu'; warnings-as-errors pins that auto did not take
+    the misfit fallback).  Also pins the layout default: real webspam
+    feature-shards, criteo does not."""
+    r = _run("""
+        import warnings
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.kernels import ops as kops
+        from repro.kernels.sdca_sparse_bucket import V_VMEM_BUDGET_BYTES
+        from repro.launch.glm import (GLMScale, make_sparse_epoch,
+                                      scale_for_dataset)
+        from repro.launch.mesh import make_host_mesh
+        from repro.data import make_sparse_classification
+
+        d = V_VMEM_BUDGET_BYTES // 4 + 8    # past the replicated budget
+        n, nnz, B = 32, 8, 8
+        assert kops.sparse_solver_plan(n, nnz, d, B, model_lanes=2) == \\
+            ("pallas-sharded", None)
+        assert scale_for_dataset("webspam").feature_shard
+        assert not scale_for_dataset("criteo-kaggle-sub").feature_shard
+
+        (idx, val), y, _ = make_sparse_classification(n=n, d=d, nnz=nnz,
+                                                      seed=3)
+        idx, val, y = (jnp.asarray(t) for t in (idx, val, y))
+        a0, v0 = jnp.zeros(n), jnp.zeros(d)
+        mesh = make_host_mesh(pod=1, data=2, model=2)
+        jax.default_backend = lambda: "tpu"   # auto resolves to pallas
+        outs = {}
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            for solver in ("xla", "auto"):
+                sc = GLMScale("w", "sparse", n=n, d=d, nnz=nnz, bucket=B,
+                              chunks=2, lam=1e-2, compress_pod=False,
+                              deterministic=True, local_solver=solver,
+                              feature_shard=True)
+                with mesh:
+                    ep = jax.jit(make_sparse_epoch(sc, mesh,
+                                                   interpret=True))
+                    st = ep(idx, val, y, a0, v0, jnp.int32(0))
+                outs[solver] = [np.asarray(t) for t in st]
+        for xa, pa in zip(outs["xla"], outs["auto"]):
+            assert np.array_equal(xa, pa)
+        assert np.abs(outs["auto"][4]).max() > 0
+        print("OK")
+    """, timeout=900)
     assert "OK" in r.stdout, r.stdout + r.stderr
 
 

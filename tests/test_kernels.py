@@ -355,6 +355,116 @@ def test_sdca_sparse_kernel_bitwise_property():
 
 
 # ---------------------------------------------------------------------------
+# Feature-sharded sparse kernel (DESIGN.md S12): the same bitwise contract,
+# lane by lane, with the engine's exchange emulated in-process.
+# ---------------------------------------------------------------------------
+
+from repro.kernels import sdca_sparse_bucket
+
+
+@pytest.mark.parametrize("obj", OBJS, ids=lambda o: o.name)
+@pytest.mark.parametrize("n,d,nnz,B", [
+    (32, 64, 8, 8),       # aligned d
+    (32, 250, 8, 16),     # d needs sublane padding inside the slice
+])
+def test_sdca_sparse_sharded_single_lane_bitwise(obj, n, d, nnz, B):
+    """model_lanes=1: the one slice IS the whole v, so the sharded
+    driver must reproduce the scan (and replicated kernel) bitwise."""
+    idx, val, y, a, v0 = _sparse_data(obj, n, d, nnz, seed=n + d)
+    lam_n, sig = jnp.float32(0.1 * n), jnp.float32(2.0)
+    a_ref, dv_ref = core_sdca.sparse_local_subepoch(
+        obj, idx, val, y, a, v0, lam_n, sig)
+    a_s, dv_s = ops.sdca_sparse_sharded_subepoch(
+        obj, idx, val, y, a, v0, lam_n, sig, bucket=B, interpret=True)
+    np.testing.assert_array_equal(np.asarray(a_s), np.asarray(a_ref))
+    np.testing.assert_array_equal(np.asarray(dv_s), np.asarray(dv_ref))
+    assert np.abs(np.asarray(dv_s)).max() > 0
+
+
+@pytest.mark.parametrize("obj", OBJS, ids=lambda o: o.name)
+@pytest.mark.parametrize("M", [2, 4])
+def test_sdca_sparse_sharded_multilane_emulated_exchange(obj, M):
+    """Drive the per-bucket kernel pair lane by lane with the engine's
+    all-gather/owner-select exchange emulated in jnp: the M lanes'
+    disjoint dv slices, concatenated, must equal the serial scan's dv
+    bitwise, and every lane must agree on the duals."""
+    n, d, nnz, B = 32, 50, 8, 16       # d=50: uneven slices + padding
+    idx, val, y, a, v0 = _sparse_data(obj, n, d, nnz, seed=3 + M)
+    lam_n, sig = jnp.float32(0.1 * n), jnp.float32(2.0)
+    a_ref, dv_ref = core_sdca.sparse_local_subepoch(
+        obj, idx, val, y, a, v0, lam_n, sig)
+
+    d_loc = ops.sparse_slice_width(d, M)
+    d_pad = d_loc * M
+    v_pad = jnp.zeros((d_pad, 1), jnp.float32).at[:d, 0].set(v0)
+    v_locs = [v_pad[k * d_loc:(k + 1) * d_loc] for k in range(M)]
+    v0_locs = list(v_locs)
+    scal = jnp.stack([lam_n, sig])
+    valf = val.astype(jnp.float32)
+    q = jnp.sum(valf * valf, axis=1)
+    a_rows = []
+    for b in range(n // B):
+        sl = slice(b * B, (b + 1) * B)
+        idx_t, val_t = idx[sl], val[sl]
+        y_t, a_t, q_t = y[sl], a[sl], q[sl]
+        parts = jnp.stack([
+            sdca_sparse_bucket.sdca_sparse_gather_bucket(
+                idx_t, v_locs[k], jnp.int32(k * d_loc), True)
+            for k in range(M)])                       # (M, B, nnz)
+        owner = (idx_t // jnp.int32(d_loc)).astype(jnp.int32)
+        W = jnp.take_along_axis(parts, owner[None], axis=0)[0]
+        a_lanes = []
+        for k in range(M):
+            a_new, v_locs[k] = (
+                sdca_sparse_bucket.sdca_sparse_sharded_bucket(
+                    obj, idx_t, val_t, y_t, a_t, q_t, W, v_locs[k],
+                    scal, jnp.int32(k * d_loc), True))
+            a_lanes.append(np.asarray(a_new))
+        for other in a_lanes[1:]:       # redundant recursion agrees
+            np.testing.assert_array_equal(other, a_lanes[0])
+        a_rows.append(a_lanes[0])
+    dv = jnp.concatenate(
+        [(v_locs[k] - v0_locs[k])[:, 0] for k in range(M)])[:d] / sig
+    np.testing.assert_array_equal(np.concatenate(a_rows),
+                                  np.asarray(a_ref))
+    np.testing.assert_array_equal(np.asarray(dv), np.asarray(dv_ref))
+    assert np.abs(np.asarray(dv)).max() > 0
+
+
+def test_sdca_sparse_sharded_kernel_guards():
+    """The sharded kernel pair enforces alignment and both VMEM budgets
+    with actionable errors, mirroring the replicated kernel's guards."""
+    from repro.kernels.sdca_sparse_bucket import (
+        TOTAL_VMEM_BUDGET_BYTES, V_VMEM_BUDGET_BYTES,
+        vmem_bytes_estimate_sharded)
+    B, nnz = 8, 8
+    idx_t = jnp.zeros((B, nnz), jnp.int32)
+    lo = jnp.int32(0)
+    # slice rows over the resident budget even after sharding
+    d_big = V_VMEM_BUDGET_BYTES // 4 + 8
+    with pytest.raises(ValueError, match="even feature-sharded"):
+        sdca_sparse_bucket.sdca_sparse_gather_bucket(
+            idx_t, jnp.zeros((d_big, 1), jnp.float32), lo, True)
+    # slice not sublane-aligned (the driver always aligns; direct
+    # callers get told who is responsible)
+    with pytest.raises(ValueError, match="multiple of 8"):
+        sdca_sparse_bucket.sdca_sparse_gather_bucket(
+            idx_t, jnp.zeros((12, 1), jnp.float32), lo, True)
+    # (B, nnz, nnz) match tensor blows the total budget
+    Bw, nnzw = 16, 512
+    assert (vmem_bytes_estimate_sharded(Bw, nnzw, 64)
+            > TOTAL_VMEM_BUDGET_BYTES)
+    with pytest.raises(ValueError, match="match tensor"):
+        sdca_sparse_bucket.sdca_sparse_sharded_bucket(
+            LOGISTIC, jnp.zeros((Bw, nnzw), jnp.int32),
+            jnp.zeros((Bw, nnzw), jnp.float32), jnp.ones(Bw),
+            jnp.zeros(Bw), jnp.zeros(Bw),
+            jnp.zeros((Bw, nnzw), jnp.float32),
+            jnp.zeros((64, 1), jnp.float32),
+            jnp.stack([jnp.float32(1.0), jnp.float32(1.0)]), lo, True)
+
+
+# ---------------------------------------------------------------------------
 # Flash attention kernel (kernels/flash_attention.py)
 # ---------------------------------------------------------------------------
 

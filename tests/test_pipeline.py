@@ -198,6 +198,47 @@ def test_cache_nnz_multiple_pads_rows_lane_aligned(tmp_path):
     assert a.path != b.path and b.meta.nnz == 16
 
 
+def test_cache_slice_gather_compacts_feature_slice(tmp_path):
+    """TileCache.slice_gather keeps only a [lo, hi) feature slice's
+    nonzeros, in row order, rebased to slice-local ids and padded to
+    the kernel lane multiple (DESIGN.md S12 streamed-shard building
+    block)."""
+    rng = np.random.default_rng(11)
+    n, nnz, d, B = 32, 8, 40, 8
+    idx = rng.integers(0, d, (n, nnz)).astype(np.int32)
+    val = rng.standard_normal((n, nnz)).astype(np.float32)
+    y = rng.choice([-1.0, 1.0], n).astype(np.float32)
+    tc = tile_cache.build_cache(tmp_path / "c", "t", idx=idx, val=val,
+                                y=y, d=d, bucket=B)
+    lo, hi = 16, 32
+    bids = np.asarray([2, 0, 3])
+    (idx_s, val_s), y_s = tc.slice_gather(bids, lo, hi)
+    (idx_g, val_g), y_g = tc.gather_buckets(bids)
+    np.testing.assert_array_equal(y_s, y_g)
+    assert idx_s.shape[-1] % 8 == 0
+    for r in range(idx_g.shape[0]):
+        own = [(int(i) - lo, float(v)) for i, v in
+               zip(idx_g[r], val_g[r]) if lo <= i < hi and v != 0]
+        got = [(int(i), float(v)) for i, v in
+               zip(idx_s[r], val_s[r]) if v != 0]
+        assert got == own                         # order-preserving
+        assert (val_s[r, len(own):] == 0).all()   # inert right padding
+    # the slice's dense reconstruction equals slicing the full rows
+    Xf = formats.to_dense(idx_g, val_g, d)[lo:hi]
+    Xs = formats.to_dense(idx_s, val_s, hi - lo)
+    np.testing.assert_array_equal(Xf, Xs)
+    # guards: sparse-only, sane bounds
+    rngd = np.random.default_rng(12)
+    Xd = rngd.standard_normal((8, 16)).astype(np.float32)
+    yd = np.ones(16, np.float32)
+    tcd = tile_cache.build_cache(tmp_path / "cd", "t", X=Xd, y=yd,
+                                 bucket=8)
+    with pytest.raises(ValueError, match="sparse-only"):
+        tcd.slice_gather(bids, lo, hi)
+    with pytest.raises(ValueError, match="feature slice"):
+        tc.slice_gather(bids, 8, 8)
+
+
 def test_raw_ingest_nnz_multiple_reaches_pallas(tmp_path):
     """The alignment error's suggested fix is reachable from the top:
     a raw svmlight ingest with an odd row width trains with
