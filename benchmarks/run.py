@@ -25,7 +25,9 @@ from . import (fig1_wild_convergence, fig2_scaling_partitions,
 # the >20% regression gate.  v2: fig3/fig6 sklearn+estimator arms.
 # v3: fig6 sparse xla-vs-pallas arms + deduped synthetic sparse rows.
 # v4: fig6 feature-sharded sparse arm (webspam-shaped, model-axis mesh).
-WORKLOAD_VERSION = 4
+# v5: fig6 planner arm ($REPRO_PLAN=probe geometry search, chosen
+#     SolverPlan emitted under figures[...]["plans"]).
+WORKLOAD_VERSION = 5
 
 BENCHES = [
     ("fig1_wild_convergence", fig1_wild_convergence),
@@ -91,6 +93,15 @@ def main(argv=None) -> int:
                for r in rows if r.get("examples_per_s") is not None]
         if thr:
             figures[name]["throughput"] = thr
+        # chosen SolverPlans from planner arms (fig6) land next to the
+        # throughput records: CI tracks WHAT the planner picked (bucket,
+        # chunks, route, probe seconds), not just how fast it ran
+        plans = [{"dataset": r.get("dataset"), "solver": r.get("solver"),
+                  "examples_per_s": r.get("examples_per_s"),
+                  "plan": r["plan"]}
+                 for r in rows if r.get("plan") is not None]
+        if plans:
+            figures[name]["plans"] = plans
         print(f"----- {name}: {len(rows)} rows in {dt:.1f}s")
 
     print(f"\nbenchmarks complete: {total} rows"

@@ -29,9 +29,11 @@ class Callback:
     needs_gap: bool = False
 
     def bind(self, session) -> None:
+        """Attach the owning `Session` before the first epoch."""
         self.session = session
 
     def on_epoch_end(self, metrics: dict) -> Optional[bool]:
+        """Called after every epoch; return True to stop training."""
         return None
 
 
@@ -58,6 +60,7 @@ class EarlyStopping(Callback):
         self.stale = 0
 
     def on_epoch_end(self, metrics: dict) -> bool:
+        """Stop when the monitored metric hits its target or stalls."""
         val = metrics.get(self.monitor)
         if val is None:
             return False
@@ -90,6 +93,7 @@ class GapLogger(Callback):
         self.trace: list[tuple[int, float]] = []
 
     def on_epoch_end(self, metrics: dict) -> None:
+        """Record and (every `every` epochs) print the duality gap."""
         ep = int(metrics["epoch"])
         if ep % self.every:
             return
@@ -115,6 +119,7 @@ class CheckpointHook(Callback):
         self.meta = meta or {}
 
     def on_epoch_end(self, metrics: dict) -> None:
+        """Save a checkpoint every `every` epochs."""
         ep = int(metrics["epoch"])
         if ep % self.every:
             return
@@ -131,13 +136,16 @@ class BenchmarkRecorder(Callback):
         self._t0 = time.perf_counter()
 
     def bind(self, session) -> None:
+        """Attach the session and restart the wall clock."""
         super().bind(session)
         self._t0 = time.perf_counter()
 
     def on_epoch_end(self, metrics: dict) -> None:
+        """Append this epoch's metrics stamped with elapsed wall time."""
         self.records.append(
             dict(metrics, wall=time.perf_counter() - self._t0))
 
     @property
     def wall_time(self) -> float:
+        """Wall-clock seconds from bind to the latest recorded epoch."""
         return self.records[-1]["wall"] if self.records else 0.0

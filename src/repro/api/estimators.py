@@ -118,9 +118,11 @@ class GLMEstimator:
         return [p for p in sig.parameters if p != "self"]
 
     def get_params(self, deep: bool = True) -> dict[str, Any]:
+        """Constructor parameters as a dict (sklearn protocol)."""
         return {name: getattr(self, name) for name in self._param_names()}
 
     def set_params(self, **params) -> "GLMEstimator":
+        """Set constructor parameters in place; returns self (sklearn protocol)."""
         valid = set(self._param_names())
         for name, value in params.items():
             if name not in valid:
@@ -131,6 +133,7 @@ class GLMEstimator:
         return self
 
     def engine_config(self) -> EngineConfig:
+        """The `EngineConfig` this estimator's parameters resolve to."""
         return EngineConfig.make(
             pods=self.pods, lanes=self.lanes, bucket=self.bucket,
             chunks=self.chunks, partition=self.partition,
@@ -243,6 +246,7 @@ class GLMEstimator:
         return self._margins(X)
 
     def predict(self, X) -> np.ndarray:
+        """Class labels for classifiers, real-valued predictions otherwise."""
         m = self._margins(X)
         if not self._classifier:
             return m
@@ -340,6 +344,7 @@ class LogisticRegression(GLMEstimator):
         return np.stack([1.0 - p1, p1], axis=1)
 
     def predict_log_proba(self, X) -> np.ndarray:
+        """Log of `predict_proba`, clipped away from -inf."""
         return np.log(np.maximum(self.predict_proba(X), 1e-30))
 
 

@@ -123,6 +123,7 @@ class Session:
         self.streamed = streamed
         self.cache = None
         self.feed = None
+        self.solver_plan = None       # set when "auto" routes via planner
         self.history: list[dict[str, float]] = []
 
         # `Session((X, y))` / `Session(((idx, val), y))` sugar — only
@@ -181,6 +182,33 @@ class Session:
         algo = self.spec.algo
         force = bucket if bucket is not None else (algo.bucket or None)
         B = force if force else 1
+        # local_solver="auto" routes through the system-aware planner
+        # (DESIGN.md S13).  Under the default $REPRO_PLAN=on|off the
+        # geometry below stays bitwise today's static resolution (the
+        # plan only records the route); $REPRO_PLAN=search|probe lets
+        # the planner pick bucket/chunks when the caller left them at
+        # the defaults (bucket kwarg unset and algo.bucket <= 1).
+        self.solver_plan = None
+        from repro.core import planner
+        if (algo.local_solver == "auto" and (not sparse or d is not None)
+                and planner.plan_mode() != "off"):
+            open_geom = ((bucket is None and (algo.bucket or 1) == 1)
+                         and planner.plan_mode() in ("search", "probe"))
+            sig = planner.WorkloadSignature(
+                n=int(y.shape[0]),
+                d=int(d) if sparse else int(np.shape(data)[0]),
+                nnz=int(np.shape(data[0])[1]) if sparse else 0,
+                sparse=sparse)
+            self.solver_plan = planner.resolve_plan(
+                sig, planner.Topology.detect(self.spec),
+                bucket=None if open_geom else B,
+                chunks=None if open_geom else algo.chunks)
+            if open_geom:
+                force = B = self.solver_plan.bucket
+                if self.solver_plan.chunks != algo.chunks:
+                    algo = dataclasses.replace(
+                        algo, chunks=self.solver_plan.chunks)
+                    self.spec = dataclasses.replace(self.spec, algo=algo)
         idx = val = X = None
         if sparse:
             idx = np.asarray(data[0], np.int32)
@@ -493,6 +521,7 @@ class Session:
         return primal, dual
 
     def primal(self) -> float:
+        """Primal objective P(v) at the current shared vector."""
         if self.streamed:
             return self._streamed_primal_dual()[0]
         if self.sparse:
@@ -517,10 +546,12 @@ class Session:
     # -- checkpoint/restart ------------------------------------------------
 
     def state_dict(self) -> dict[str, Any]:
+        """Training state (alpha, v, epoch) as host arrays for checkpointing."""
         return {"alpha": np.asarray(self.alpha), "v": np.asarray(self.v),
                 "epoch": np.int64(self.epochs_done)}
 
     def load_state_dict(self, st: dict[str, Any]) -> None:
+        """Restore training state produced by `state_dict`."""
         self.alpha = jnp.asarray(st["alpha"])
         self.v = jnp.asarray(st["v"])
         self.epochs_done = int(st["epoch"])

@@ -267,12 +267,13 @@ def _auto_fallback(pallas_solve: LocalSolver, xla_solve: LocalSolver,
 
 def _sparse_auto_fallback(obj: Objective, lam_n, sig, bucket: int,
                           pallas_solve: LocalSolver) -> LocalSolver:
-    from repro.kernels import ops as kops
+    from repro.core import planner
 
     def misfit(data, v):
         idx, _ = data
-        return kops.sparse_kernel_misfit(
+        _, why = planner.route_sparse(
             idx.shape[-2], idx.shape[-1], v.shape[-1], bucket)
+        return why
     return _auto_fallback(pallas_solve, sparse_solver(obj, lam_n, sig),
                           misfit, "sparse")
 
@@ -284,13 +285,14 @@ def _sparse_sharded_auto_fallback(obj: Objective, lam_n, sig, bucket: int,
     carries `model_lanes` (sharded feasibility) and the fallback is the
     slice-MASKED scan — the layout already commits every lane to owning
     only its dv slice."""
-    from repro.kernels import ops as kops
+    from repro.core import planner
 
     def misfit(data, v):
         idx, _ = data
-        return kops.sparse_kernel_misfit(
+        _, why = planner.route_sparse(
             idx.shape[-2], idx.shape[-1], v.shape[-1], bucket,
             model_lanes=model_lanes)
+        return why
     return _auto_fallback(
         pallas_solve,
         sparse_sharded_xla_solver(obj, lam_n, sig, model_axis,
@@ -300,11 +302,10 @@ def _sparse_sharded_auto_fallback(obj: Objective, lam_n, sig, bucket: int,
 
 def _dense_auto_fallback(obj: Objective, lam_n, sig, bucket: int,
                          pallas_solve: LocalSolver) -> LocalSolver:
-    from repro.kernels import ops as kops
+    from repro.core import planner
 
     def misfit(X, v):
-        return kops.dense_kernel_misfit(
-            X.shape[-2], X.shape[-1], bucket)
+        return planner.route_dense(X.shape[-2], X.shape[-1], bucket)
     return _auto_fallback(pallas_solve,
                           dense_xla_solver(obj, lam_n, sig, bucket),
                           misfit, "dense")
@@ -321,7 +322,11 @@ def make_local_solver(kind: str, obj: Objective, lam_n, sig, *,
     "auto" resolves via `resolve_auto_solver`: "pallas" on TPU backends
     for BOTH the dense and sparse paths, "xla" elsewhere, with
     `$REPRO_LOCAL_SOLVER` as the override.  Unknown kinds are rejected
-    everywhere.
+    everywhere.  Backend-picked auto's per-workload misfit pre-checks
+    route through `core.planner.route_sparse`/`route_dense` (DESIGN.md
+    S13) — pure delegations to the kernels' own predicates, so plans
+    can never loosen feasibility and `$REPRO_PLAN` never changes the
+    fallback verdicts here.
 
     Feature sharding: `model_axis` + `model_lanes` on the SPARSE path
     select the sharded-v layout (DESIGN.md S12) — "pallas" runs the

@@ -89,6 +89,33 @@ def sparse_solver_plan(n_local: int, nnz: int, d: int, bucket: int, *,
     return "xla", reason
 
 
+def plan_solver(n: int, d: int, *, nnz: int = 0, sparse: bool = False,
+                name: str = "", bucket: int | None = None,
+                chunks: int | None = None,
+                nnz_multiple: int | None = None, model_lanes: int = 1,
+                cache_dir=None, probe_fn=None):
+    """System-aware geometry + route for a workload: -> `SolverPlan`.
+
+    The kernels-side door into `core.planner` (DESIGN.md S13): builds
+    the workload signature from (n, d, nnz, sparse), detects the live
+    topology from the jax backend, and resolves a plan honoring
+    ``$REPRO_PLAN`` (off | on | search | probe) with disk caching per
+    (dataset fingerprint, topology) next to the tile cache.  Knobs
+    passed explicitly (bucket/chunks/nnz_multiple) are never
+    overridden — the planner only decides what was left open — and
+    every emitted plan passes the misfit predicates above (the PR-4
+    never-regress contract; any planner failure degrades warn-and-safe
+    to the static resolution).
+    """
+    from repro.core import planner
+    sig = planner.WorkloadSignature(n=int(n), d=int(d), nnz=int(nnz),
+                                    sparse=bool(sparse), name=name)
+    topo = planner.Topology.detect(model_lanes=model_lanes)
+    return planner.resolve_plan(sig, topo, bucket=bucket, chunks=chunks,
+                                nnz_multiple=nnz_multiple,
+                                cache_dir=cache_dir, probe_fn=probe_fn)
+
+
 def sparse_kernel_misfit(n_local: int, nnz: int, d: int, bucket: int,
                          model_lanes: int = 1) -> str | None:
     """Why NO sparse Pallas kernel can run this workload, or None.
@@ -149,11 +176,11 @@ def _csr_mark_checked(idx, val) -> None:
         return
     key = (id(idx), id(val))
 
-    def drop(_ref, _key=key):
+    def _drop(_ref, _key=key):
         _csr_checked.pop(_key, None)
     try:
-        _csr_checked[key] = (weakref.ref(idx, drop),
-                             weakref.ref(val, drop))
+        _csr_checked[key] = (weakref.ref(idx, _drop),
+                             weakref.ref(val, _drop))
     except TypeError:
         pass
 
@@ -355,7 +382,7 @@ def sdca_sparse_sharded_subepoch(obj: Objective, idx, val, yl, al, v0,
     # axis_index-derived values inside loops as loop-invariant-
     # replicated on current jax (see engine.run_epoch's unrolled chunk
     # loop) — carrying it through keeps every lane on its own slice.
-    def step(carry, tile):
+    def _step(carry, tile):
         v_loc, lo = carry
         idx_t, val_t, y_t, a_t, q_t = tile
         w_loc = sdca_sparse_bucket.sdca_sparse_gather_bucket(
@@ -372,7 +399,7 @@ def sdca_sparse_sharded_subepoch(obj: Objective, idx, val, yl, al, v0,
         return (v_loc, lo), a_new_t
 
     (v_fin, _), a_new = jax.lax.scan(
-        step, (v_loc0, lo0), (idxb, valb, yb, ab, qb))
+        _step, (v_loc0, lo0), (idxb, valb, yb, ab, qb))
 
     dv_loc = (v_fin[:, 0] - v_loc0[:, 0]) / jnp.float32(sig)
     dv = jax.lax.dynamic_update_slice(

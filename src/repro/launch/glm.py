@@ -141,14 +141,19 @@ def scale_for_dataset(name: str, **overrides) -> GLMScale:
     Sizes come from the dataset registry's REAL shapes (not the offline
     sub-samples): n is padded to a 32k multiple and d/nnz to mesh- and
     tile-friendly multiples, mirroring how the hand-written GLM_CONFIGS
-    entries were derived from the paper's tables.  Wide dense datasets
-    (d >= 512) default to feature sharding over 'model'; sparse
-    datasets default to it exactly when the replicated shared vector
-    cannot fit the kernel's VMEM budget (webspam-scale d) — the same
-    boundary `kernels.ops.sparse_solver_plan` dispatches on.
+    entries were derived from the paper's tables.  The data layout —
+    and, under ``$REPRO_PLAN=search|probe``, the bucket/chunk geometry
+    — resolves through the system-aware planner (`core.planner`,
+    DESIGN.md S13): wide dense datasets (d >= 512) feature-shard over
+    'model'; sparse datasets do exactly when the replicated shared
+    vector cannot fit the kernel's VMEM budget (webspam-scale d) — the
+    same boundary `kernels.ops.sparse_solver_plan` dispatches on, now
+    written once in `planner.feature_shard_default`.  Explicit
+    overrides always win, and any planner failure degrades
+    warn-and-safe to that static layout rule.
     """
+    from repro.core import planner
     from repro.data.registry import get_spec
-    from repro.kernels.sdca_sparse_bucket import V_VMEM_BUDGET_BYTES
 
     spec = get_spec(name)
     n = -(-spec.full_n // 32_768) * 32_768
@@ -156,11 +161,19 @@ def scale_for_dataset(name: str, **overrides) -> GLMScale:
         else spec.full_d
     kw = dict(name=f"glm-{name}", kind=spec.kind, n=n, d=d,
               lam=spec.lam)
-    if spec.kind == "sparse":
+    sparse = spec.kind == "sparse"
+    if sparse:
         kw["nnz"] = -(-spec.nnz // 8) * 8
-        kw["feature_shard"] = (-(-d // 8) * 8) * 4 > V_VMEM_BUDGET_BYTES
-    else:
-        kw["feature_shard"] = spec.full_d >= 512
+    sig = planner.WorkloadSignature(n=n, d=d, nnz=kw.get("nnz", 0),
+                                    sparse=sparse, name=name)
+    searching = planner.plan_mode() in ("search", "probe")
+    plan = planner.resolve_plan(
+        sig, planner.Topology.detect(),
+        bucket=overrides.get("bucket", None if searching else 16),
+        chunks=overrides.get("chunks", None if searching else 4))
+    kw["feature_shard"] = plan.feature_shard
+    if searching:
+        kw["bucket"], kw["chunks"] = plan.bucket, plan.chunks
     kw.update(overrides)
     return GLMScale(**kw)
 

@@ -1,0 +1,6 @@
+"""Neural building blocks kept alongside the GLM core.
+
+Attention, gated-recurrent (RG-LRU), MoE, and small LM assemblies used
+by the non-GLM benchmarks and kernel exercises; independent of the
+CoCoA+/SDCA training path.
+"""

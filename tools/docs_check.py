@@ -1,0 +1,98 @@
+"""Docs gate: markdown link check + README quickstart smoke test.
+
+Stdlib-only (CI runs it before any heavyweight install). Two checks:
+
+1. every relative link target in the repo's ``*.md`` files (root and
+   ``docs/``) must exist on disk, and in-page ``#anchor`` fragments
+   must match a heading in the target file (GitHub slug rules);
+2. the first ``python`` code fence in README.md — the quickstart — is
+   executed; it must run to completion without raising.
+
+External ``http(s)://`` links are not fetched (no network flakiness in
+CI); they are only checked for obvious malformation (empty target).
+
+Usage::
+
+    PYTHONPATH=src python tools/docs_check.py [--no-quickstart]
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# [text](target) — ignores images' leading "!" (same target rules)
+_LINK = re.compile(r"\[[^\]^\[]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug for a heading line."""
+    text = re.sub(r"[`*_]", "", heading.strip().lower())
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def _md_files() -> list[Path]:
+    return sorted(ROOT.glob("*.md")) + sorted((ROOT / "docs").glob("*.md"))
+
+
+def _anchors(path: Path) -> set[str]:
+    return {_slug(h) for h in _HEADING.findall(path.read_text())}
+
+
+def check_links() -> list[str]:
+    """Return a list of broken-link descriptions (empty = clean)."""
+    errors = []
+    for md in _md_files():
+        for target in _LINK.findall(md.read_text()):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, frag = target.partition("#")
+            dest = (md.parent / path_part).resolve() if path_part else md
+            if not dest.exists():
+                errors.append(f"{md.relative_to(ROOT)}: missing {target}")
+            elif frag and dest.suffix == ".md" and _slug(frag) not in _anchors(dest):
+                errors.append(f"{md.relative_to(ROOT)}: no anchor #{frag} in {dest.name}")
+    return errors
+
+
+def run_quickstart() -> None:
+    """Extract README's first python fence and exec it (raises on failure)."""
+    readme = (ROOT / "README.md").read_text()
+    fences = _FENCE.findall(readme)
+    if not fences:
+        raise SystemExit("README.md has no ```python fence to smoke-test")
+    code = fences[0]
+    print("-- README quickstart --")
+    print(code)
+    exec(compile(code, "README.md:quickstart", "exec"), {"__name__": "__main__"})
+
+
+def main(argv: list[str] | None = None) -> int:
+    """CLI entry point; returns a process exit status."""
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--no-quickstart", action="store_true",
+                    help="only check links (skip executing the README snippet)")
+    args = ap.parse_args(argv)
+
+    errors = check_links()
+    for e in errors:
+        print(f"BROKEN LINK: {e}", file=sys.stderr)
+    print(f"link check: {len(_md_files())} files, "
+          f"{len(errors)} broken link(s)")
+    if errors:
+        return 1
+    if not args.no_quickstart:
+        run_quickstart()
+        print("quickstart: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
