@@ -1,0 +1,273 @@
+"""Layer-2 AST lint: repo-specific rules ruff cannot express.
+
+Every checker operates on ``(repo-relative path, source)`` pairs, so
+the mutation self-tests can feed synthesized module sources through
+the exact production code paths without touching the tree.  Stdlib
+only — no jax import — which keeps the lint layer runnable in a bare
+CI container and importable by docs tooling.
+
+Rules (registry: `analysis.rules`):
+
+* LINT-KERNEL-CONTRACT — every pallas_call entry point in the live
+  kernel files is registered in `kernels.contracts.KERNEL_CONTRACTS`
+  with a misfit predicate and a VMEM estimator.
+* LINT-RAW-COLLECTIVE — lax collective calls in the collective-scoped
+  files carry the ``# audit: collective-ok`` marker.
+* LINT-UNSEEDED-RNG — no numpy global-state RNG / stdlib ``random``
+  in live modules.
+* LINT-CSR-ENTRY — each CSR entry altitude still calls
+  ``raise_on_duplicate_nonzeros``.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Iterable, Mapping, Optional
+
+from . import config, rules
+from .rules import Finding
+
+__all__ = ["run_lint", "default_sources", "check_kernel_contracts",
+           "check_collective_markers", "check_unseeded_rng",
+           "check_csr_entries"]
+
+#: numpy.random attributes that are explicitly seeded constructors
+#: (everything else on np.random is the legacy global-state API).
+_SEEDED_RNG_OK = frozenset({
+    "default_rng", "Generator", "SeedSequence", "PCG64", "Philox",
+    "MT19937", "BitGenerator",
+})
+
+
+def default_sources() -> dict[str, str]:
+    """Discover the live sources: every .py under `config.LINT_ROOTS`
+    that is not quarantined, as {repo-relative path: source}."""
+    out: dict[str, str] = {}
+    for root in config.LINT_ROOTS:
+        base = config.REPO_ROOT / root
+        for p in sorted(base.rglob("*.py")):
+            rel = str(p.relative_to(config.REPO_ROOT))
+            if config.is_quarantined(rel):
+                continue
+            out[rel] = p.read_text()
+    return out
+
+
+def _parse(path: str, source: str) -> Optional[ast.Module]:
+    try:
+        return ast.parse(source, filename=path)
+    except SyntaxError:                       # pragma: no cover - defensive
+        return None
+
+
+def _attr_chain(node: ast.AST) -> list[str]:
+    """x.y.z -> ["x", "y", "z"] (empty when not a plain name chain)."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return parts[::-1]
+    return []
+
+
+def check_kernel_contracts(path: str, source: str,
+                           contracts: Mapping[str, Mapping[str, str]],
+                           ) -> list[Finding]:
+    """LINT-KERNEL-CONTRACT over one live kernel file.
+
+    A "kernel entry point" is any module-level function whose body
+    contains a ``pallas_call`` invocation; its registry key is
+    ``<module-stem>.<function-name>`` and the entry must name both a
+    ``misfit`` predicate and a ``vmem_estimate`` model.
+    """
+    tree = _parse(path, source)
+    if tree is None:
+        return []
+    stem = pathlib.Path(path).stem
+    found: list[Finding] = []
+    for node in tree.body:
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        call_lines = [
+            sub.lineno for sub in ast.walk(node)
+            if isinstance(sub, ast.Call)
+            and (_attr_chain(sub.func)[-1:] == ["pallas_call"])]
+        if not call_lines:
+            continue
+        key = f"{stem}.{node.name}"
+        entry = contracts.get(key)
+        if entry is None:
+            found.append(Finding(
+                rules.LINT_KERNEL_CONTRACT,
+                f"pallas kernel entry point {key!r} (pallas_call at "
+                f"line {call_lines[0]}) is not registered in "
+                f"kernels/contracts.py KERNEL_CONTRACTS",
+                where=f"{path}:{node.lineno}"))
+            continue
+        for field in ("misfit", "vmem_estimate"):
+            if not entry.get(field):
+                found.append(Finding(
+                    rules.LINT_KERNEL_CONTRACT,
+                    f"KERNEL_CONTRACTS[{key!r}] is missing the "
+                    f"{field!r} reference",
+                    where=f"{path}:{node.lineno}"))
+    return found
+
+
+def check_collective_markers(path: str, source: str) -> list[Finding]:
+    """LINT-RAW-COLLECTIVE over one collective-scoped file: every
+    ``[jax.]lax.<collective>(...)`` call line (or the line above it)
+    must carry the ``# audit: collective-ok`` marker."""
+    tree = _parse(path, source)
+    if tree is None:
+        return []
+    lines = source.splitlines()
+    found: list[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _attr_chain(node.func)
+        if (len(chain) < 2 or chain[-1] not in config.COLLECTIVE_CALL_NAMES
+                or chain[-2] != "lax"):
+            continue
+        ln = node.func.lineno if hasattr(node.func, "lineno") \
+            else node.lineno
+        window = lines[max(ln - 2, 0):ln]
+        if not any(config.ALLOWLIST_MARKER in s for s in window):
+            found.append(Finding(
+                rules.LINT_RAW_COLLECTIVE,
+                f"raw collective lax.{chain[-1]} without a "
+                f"'# {config.ALLOWLIST_MARKER}' marker on the call "
+                f"line or the line above",
+                where=f"{path}:{ln}"))
+    return found
+
+
+def check_unseeded_rng(path: str, source: str) -> list[Finding]:
+    """LINT-UNSEEDED-RNG over one live file: no ``np.random.<legacy>``
+    global-state draws, no stdlib ``random`` import."""
+    tree = _parse(path, source)
+    if tree is None:
+        return []
+    found: list[Finding] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == "random":
+                    found.append(Finding(
+                        rules.LINT_UNSEEDED_RNG,
+                        "stdlib `import random` in live solver code; "
+                        "use np.random.default_rng(seed) or a jax key",
+                        where=f"{path}:{node.lineno}"))
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "random":
+                found.append(Finding(
+                    rules.LINT_UNSEEDED_RNG,
+                    "stdlib `from random import ...` in live solver "
+                    "code; use np.random.default_rng(seed)",
+                    where=f"{path}:{node.lineno}"))
+        elif isinstance(node, ast.Attribute):
+            chain = _attr_chain(node)
+            if (len(chain) == 3 and chain[0] in ("np", "numpy")
+                    and chain[1] == "random"
+                    and chain[2] not in _SEEDED_RNG_OK):
+                found.append(Finding(
+                    rules.LINT_UNSEEDED_RNG,
+                    f"global-state numpy RNG np.random.{chain[2]}; "
+                    f"use np.random.default_rng(seed)",
+                    where=f"{path}:{node.lineno}"))
+    return found
+
+
+def check_csr_entries(sources: Mapping[str, str]) -> list[Finding]:
+    """LINT-CSR-ENTRY: each configured altitude file must contain at
+    least one call to `raise_on_duplicate_nonzeros`."""
+    found: list[Finding] = []
+    for path in config.CSR_ENTRY_FILES:
+        src = sources.get(path)
+        if src is None:
+            continue                      # partial source sets (tests)
+        tree = _parse(path, src)
+        calls = [
+            n for n in ast.walk(tree)
+            if isinstance(n, ast.Call)
+            and _attr_chain(n.func)[-1:] == [config.CSR_CHECK_NAME]
+        ] if tree else []
+        if not calls:
+            found.append(Finding(
+                rules.LINT_CSR_ENTRY,
+                f"CSR entry altitude no longer calls "
+                f"{config.CSR_CHECK_NAME}; the no-duplicate-nonzero "
+                f"invariant is unenforced at this boundary",
+                where=f"{path}:1"))
+    return found
+
+
+def _load_contracts() -> Mapping[str, Mapping[str, str]]:
+    from repro.kernels.contracts import KERNEL_CONTRACTS
+    return KERNEL_CONTRACTS
+
+
+def resolve_contract_refs(contracts: Optional[Mapping] = None,
+                          ) -> list[Finding]:
+    """Import-check every dotted ``module:attr`` reference in the
+    kernel-contract registry (needs the full dependency stack; the
+    pure-AST checks above do not)."""
+    import importlib
+    contracts = _load_contracts() if contracts is None else contracts
+    found: list[Finding] = []
+    for key, entry in contracts.items():
+        for field in ("misfit", "vmem_estimate"):
+            ref = entry.get(field, "")
+            mod, _, attr = ref.partition(":")
+            try:
+                fn = getattr(importlib.import_module(mod), attr)
+                if not callable(fn):
+                    raise TypeError(f"{ref} is not callable")
+            except Exception as e:
+                found.append(Finding(
+                    rules.LINT_KERNEL_CONTRACT,
+                    f"KERNEL_CONTRACTS[{key!r}].{field} = {ref!r} "
+                    f"does not resolve: {type(e).__name__}: {e}",
+                    where="src/repro/kernels/contracts.py:1"))
+    return found
+
+
+def run_lint(sources: Optional[Mapping[str, str]] = None, *,
+             contracts: Optional[Mapping] = None,
+             resolve: bool = False,
+             only: Optional[Iterable[str]] = None) -> list[Finding]:
+    """Run every lint rule over the live tree (or injected sources).
+
+    ``sources`` maps repo-relative paths to source text (default: the
+    live tree per `config`); ``only`` restricts to a subset of rule
+    IDs; ``resolve=True`` additionally import-checks the contract
+    registry's dotted references (requires jax).
+    """
+    sources = default_sources() if sources is None else dict(sources)
+    contracts = _load_contracts() if contracts is None else contracts
+    want = set(only) if only is not None else None
+
+    def on(rule: str) -> bool:
+        return want is None or rule in want
+
+    found: list[Finding] = []
+    if on(rules.LINT_KERNEL_CONTRACT):
+        for path in config.LIVE_KERNEL_FILES:
+            if path in sources:
+                found += check_kernel_contracts(path, sources[path],
+                                                contracts)
+        if resolve:
+            found += resolve_contract_refs(contracts)
+    if on(rules.LINT_RAW_COLLECTIVE):
+        for path in config.COLLECTIVE_SCOPED_FILES:
+            if path in sources:
+                found += check_collective_markers(path, sources[path])
+    if on(rules.LINT_UNSEEDED_RNG):
+        for path, src in sources.items():
+            found += check_unseeded_rng(path, src)
+    if on(rules.LINT_CSR_ENTRY):
+        found += check_csr_entries(sources)
+    return found

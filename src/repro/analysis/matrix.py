@@ -1,0 +1,168 @@
+"""The audit matrix: registry workloads x solver routes, traced.
+
+Each case abstract-traces a REAL epoch program — the same
+`launch/glm.py` shard_map builds (`make_dense_epoch` /
+`make_sparse_epoch`, which resolve solvers through
+`engine.make_local_solver` and run `engine.sharded_epoch`) and the
+same `engine.make_streamed_step` chunk step the out-of-core trainer
+jits — with `jax.make_jaxpr` over ShapeDtypeStructs.  No data is
+materialized and nothing executes: Pallas kernels trace in interpret
+mode on CPU, so the full matrix runs on a bare CI host with forced
+host devices (tools/audit.py sets XLA_FLAGS before importing jax).
+
+Shapes are the registry's OFFLINE sub shapes (`DatasetSpec.sub_*`) —
+the shapes CI can actually exercise — with the mesh fixed at
+data=2 (x model=2 for the sharded route).  Dense workloads audit
+feature_shard=False only: dense TP psums Gram/margin partials inside
+the sub-epoch by design and is documented as non-bitwise (DESIGN.md
+S12), so it is not on the determinism-contract path this layer
+checks.
+
+Every case traces under deterministic=True (all rules) and again
+under deterministic=False (closure rule only — psum is the legal
+exchange there).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from . import jaxpr_audit, rules
+from .rules import Finding
+
+__all__ = ["AuditCase", "build_cases", "trace_case", "run_matrix",
+           "ROUTES_SPARSE", "ROUTES_DENSE"]
+
+ROUTES_SPARSE = ("xla", "pallas-replicated", "pallas-sharded")
+ROUTES_DENSE = ("xla", "pallas-replicated")
+
+#: rules active per determinism flag: deterministic traces check
+#: everything; non-deterministic traces only the closure hazard.
+_DET_RULES = None                                    # None = all
+_NONDET_RULES = {rules.JAX_LOOP_CLOSURE}
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditCase:
+    """One traceable program + the rule scope it is audited under."""
+    name: str
+    deterministic: bool
+    trace: Callable[[], object]           # -> ClosedJaxpr
+    only: Optional[frozenset] = None      # rule-ID restriction
+
+
+def _mesh(model: int = 1):
+    from repro.launch.mesh import make_host_mesh
+    return make_host_mesh(pod=1, data=2, model=model)
+
+
+def _glm_case(spec, route: str, deterministic: bool) -> AuditCase:
+    from repro.launch import glm
+
+    def trace():
+        import jax
+        sharded = route == "pallas-sharded"
+        mesh = _mesh(model=2 if sharded else 1)
+        nnz = -(-(spec.sub_nnz or spec.nnz or 8) // 8) * 8 \
+            if spec.kind == "sparse" else 0
+        scale = glm.GLMScale(
+            name=f"audit-{spec.name}", kind=spec.kind, n=spec.sub_n,
+            d=spec.sub_d, nnz=nnz, bucket=16, chunks=2,
+            feature_shard=sharded,
+            local_solver="xla" if route == "xla" else "pallas",
+            deterministic=deterministic, compress_pod=False)
+        if spec.kind == "sparse":
+            ep = glm.make_sparse_epoch(scale, mesh, interpret=True)
+        else:
+            ep = glm.make_dense_epoch(scale, mesh)
+        return jax.make_jaxpr(ep)(*glm.glm_input_specs(scale, mesh))
+
+    tag = "det" if deterministic else "nondet"
+    return AuditCase(f"{spec.name}/{route}/{tag}", deterministic, trace,
+                     only=None if deterministic
+                     else frozenset(_NONDET_RULES))
+
+
+def _streamed_case(sparse: bool) -> AuditCase:
+    """The out-of-core chunk step (`engine.make_streamed_step`) under
+    the deterministic contract, on the sim collectives backend."""
+
+    def trace():
+        import jax
+        import jax.numpy as jnp
+        from repro.core import engine
+        from repro.core.config import EngineConfig, AlgoConfig, \
+            DeploymentConfig
+        from repro.core.objectives import LOGISTIC
+        spec = EngineConfig(
+            algo=AlgoConfig(bucket=16, chunks=2, local_solver="xla"),
+            deployment=DeploymentConfig(pods=1, lanes=2,
+                                        deterministic=True))
+        coll = engine.SimCollectives(pods=1, lanes=2, deterministic=True)
+        solver = engine.make_local_solver(
+            "xla", LOGISTIC, 2048 * 1e-3, 2.0, bucket=16, sparse=sparse)
+        step = engine.make_streamed_step(coll, solver, spec.algo,
+                                         jit=False)
+        S = jax.ShapeDtypeStruct
+        nb, d, nnz = 512, 64, 8
+        if sparse:
+            data = (S((1, 2, nb, nnz), jnp.int32),
+                    S((1, 2, nb, nnz), jnp.float32))
+        else:
+            data = S((1, 2, d, nb), jnp.float32)
+        # v_c is the pod-replicated (pods, d) view run_epoch_streamed
+        # maintains across chunks (coll.pod_replicate)
+        return jax.make_jaxpr(step)(
+            data, S((1, 2, nb), jnp.float32),
+            S((1, 2, nb), jnp.int32), S((2048,), jnp.float32),
+            S((1, d if not sparse else 256), jnp.float32))
+
+    kind = "sparse" if sparse else "dense"
+    return AuditCase(f"streamed-{kind}/xla/det", True, trace)
+
+
+def build_cases(workloads: Optional[list[str]] = None,
+                ) -> list[AuditCase]:
+    """The full matrix: every registry workload x its routes x both
+    determinism flags, plus the streamed chunk steps."""
+    from repro.data.registry import REGISTRY
+    names = workloads if workloads is not None else sorted(REGISTRY)
+    cases: list[AuditCase] = []
+    for name in names:
+        spec = REGISTRY[name]
+        routes = ROUTES_SPARSE if spec.kind == "sparse" else ROUTES_DENSE
+        for route in routes:
+            cases.append(_glm_case(spec, route, deterministic=True))
+            cases.append(_glm_case(spec, route, deterministic=False))
+    if workloads is None:
+        cases.append(_streamed_case(sparse=False))
+        cases.append(_streamed_case(sparse=True))
+    return cases
+
+
+def trace_case(case: AuditCase) -> list[Finding]:
+    """Trace + audit one case.  A trace failure is itself a finding
+    (the auditor must never silently skip a case)."""
+    try:
+        closed = case.trace()
+    except Exception as e:
+        return [Finding(
+            rules.JAX_LOOP_CLOSURE,
+            f"case failed to trace ({type(e).__name__}: {e}); the "
+            f"audit matrix must cover it", case=case.name)]
+    return jaxpr_audit.audit_jaxpr(
+        closed, deterministic=case.deterministic, case=case.name,
+        only=set(case.only) if case.only is not None else None)
+
+
+def run_matrix(workloads: Optional[list[str]] = None,
+               log=None) -> list[Finding]:
+    """Trace + audit every case; returns the combined findings."""
+    found: list[Finding] = []
+    for case in build_cases(workloads):
+        got = trace_case(case)
+        if log is not None:
+            log(f"  jaxpr {case.name}: "
+                f"{'clean' if not got else f'{len(got)} finding(s)'}")
+        found += got
+    return found

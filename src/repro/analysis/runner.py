@@ -1,0 +1,96 @@
+"""Audit orchestrator: jaxpr matrix + repo lint + VMEM budget sweep.
+
+`run_audit` is what `tools/audit.py` (and the CI static-analysis job)
+calls: it runs all three layers, returns an `AuditReport` whose `ok`
+is the CI gate, and serializes to the JSON artifact schema
+(`report.to_json()`).  Layers can be restricted for fast partial runs
+(`layers={"lint"}` needs no jax import at all).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional
+
+from .rules import RULES, Finding
+
+__all__ = ["AuditReport", "run_audit", "REPORT_VERSION", "LAYERS"]
+
+REPORT_VERSION = 1
+LAYERS = ("jaxpr", "lint", "budget")
+
+
+@dataclasses.dataclass
+class AuditReport:
+    """Everything one audit run determined."""
+    findings: list[Finding]
+    cases: list[str]                  # jaxpr matrix case names traced
+    layers: tuple[str, ...]
+    plans_swept: int = 0
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def to_json(self) -> dict:
+        return {
+            "version": REPORT_VERSION,
+            "ok": self.ok,
+            "layers": list(self.layers),
+            "cases": list(self.cases),
+            "plans_swept": self.plans_swept,
+            "findings": [f.to_json() for f in self.findings],
+            "rules": {rid: dataclasses.asdict(r)
+                      for rid, r in RULES.items()},
+        }
+
+
+def run_audit(*, layers: Optional[Iterable[str]] = None,
+              workloads: Optional[list[str]] = None,
+              log=None) -> AuditReport:
+    """Run the requested layers (default: all) over the live tree.
+
+    ``workloads`` restricts the jaxpr matrix to named registry entries
+    (tests use one small workload for speed); ``log`` gets per-case
+    progress lines.
+    """
+    want = tuple(layers) if layers is not None else LAYERS
+    unknown = set(want) - set(LAYERS)
+    if unknown:
+        raise ValueError(f"unknown audit layers: {sorted(unknown)}; "
+                         f"choose from {LAYERS}")
+
+    findings: list[Finding] = []
+    cases: list[str] = []
+    plans_swept = 0
+
+    if "jaxpr" in want:
+        from . import matrix
+        if log:
+            log("[jaxpr] tracing workload x route matrix")
+        built = matrix.build_cases(workloads)
+        cases = [c.name for c in built]
+        for case in built:
+            got = matrix.trace_case(case)
+            if log:
+                log(f"  jaxpr {case.name}: "
+                    f"{'clean' if not got else f'{len(got)} finding(s)'}")
+            findings += got
+
+    if "lint" in want:
+        from . import lint
+        if log:
+            log("[lint] AST rules over live sources")
+        # resolve=True also import-checks the contract registry's
+        # dotted refs whenever the jaxpr layer runs (jax is loaded
+        # anyway); lint-only runs stay stdlib-importable.
+        findings += lint.run_lint(resolve="jaxpr" in want)
+
+    if "budget" in want:
+        from . import budget
+        if log:
+            log("[budget] VMEM sweep over registry x topologies")
+        got, plans_swept = budget.run_budget_audit(log=log)
+        findings += got
+
+    return AuditReport(findings=findings, cases=cases, layers=want,
+                       plans_swept=plans_swept)

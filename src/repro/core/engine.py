@@ -214,6 +214,7 @@ def sparse_sharded_xla_solver(obj: Objective, lam_n, sig,
             obj, idx, val, y, a, v, jnp.asarray(lam_n, val.dtype),
             jnp.asarray(sig, val.dtype))
         d_loc = kops.sparse_slice_width(v.shape[-1], model_lanes)
+        # audit: collective-ok owner-slice offset for the masked update
         lo = jax.lax.axis_index(model_axis).astype(jnp.int32) \
             * jnp.int32(d_loc)
         j = jnp.arange(v.shape[-1], dtype=jnp.int32)
@@ -415,16 +416,17 @@ def q_psum(x: Array, axis_name: str, size: int) -> Array:
         x = jnp.pad(x, (0, pad))
     qz, _ = compress(x)
     # phase 1: exchange int8 shards, sum locally in f32
+    # audit: collective-ok pure data movement; the sum is ordered jnp.sum
     shards = jax.lax.all_to_all(
         qz.q.reshape(size, -1), axis_name, split_axis=0, concat_axis=0,
         tiled=False)                                  # (size, n/size)
-    scales = jax.lax.all_gather(qz.scale, axis_name)  # (size,)
+    scales = jax.lax.all_gather(qz.scale, axis_name)  # audit: collective-ok
     part = jnp.sum(shards.astype(jnp.float32)
                    * scales.reshape(size, 1), axis=0)  # my shard, reduced
     # phase 2: int8 all-gather of the reduced shards
     qz2, _ = compress(part)
-    q_all = jax.lax.all_gather(qz2.q, axis_name)       # (size, n/size)
-    s_all = jax.lax.all_gather(qz2.scale, axis_name)
+    q_all = jax.lax.all_gather(qz2.q, axis_name)  # audit: collective-ok
+    s_all = jax.lax.all_gather(qz2.scale, axis_name)  # audit: collective-ok
     out = (q_all.astype(jnp.float32)
            * s_all.reshape(size, 1)).reshape(x.shape)
     return out[:n] if pad else out
@@ -598,13 +600,14 @@ class MeshCollectives:
     def worker_keys(self, seed, epoch):
         base = jax.random.fold_in(jax.random.PRNGKey(seed),
                                   jnp.asarray(epoch, jnp.int32))
+        # audit: collective-ok per-worker RNG key derivation
         pod = (jax.lax.axis_index(self.pod_axis).astype(jnp.int32)
                if self.pod_axis else jnp.int32(0))
         kp = jax.random.fold_in(base, pod)
         lane = jnp.int32(0)
         for ax in self.lane_axes:
             lane = lane * self.axis_sizes[ax] \
-                + jax.lax.axis_index(ax).astype(jnp.int32)
+                + jax.lax.axis_index(ax).astype(jnp.int32)  # audit: collective-ok key derivation
         return jax.random.fold_in(kp, lane)
 
     def map_workers(self, fn, args):
@@ -637,6 +640,7 @@ class MeshCollectives:
             rest = shp[1:]
             xb = xb.reshape((nb_local, rows) + rest)[perm]
             head = xb[:exch].reshape((exch * rows,) + rest)
+            # audit: collective-ok bucket re-deal is pure data movement
             head = jax.lax.all_to_all(head, ax_name, split_axis=0,
                                       concat_axis=0, tiled=True)
             xb = jnp.concatenate(
@@ -661,8 +665,10 @@ class MeshCollectives:
             elif self.deterministic:
                 # ordered gather-sum: bit-stable and identical to the
                 # simulator's stacked reduction
+                # audit: collective-ok ordered gather-sum (bit-stable)
                 dv = jnp.sum(jax.lax.all_gather(dv, ax), axis=0)
             else:
+                # audit: collective-ok deterministic=False path only
                 dv = jax.lax.psum(dv, ax)
         return dv
 
@@ -674,14 +680,17 @@ class MeshCollectives:
         if self.compress_pod:
             from repro.optim.compression import compress
             qz, _err = compress(dv)    # EF residual handled by caller state
-            q_all = jax.lax.all_gather(qz.q, self.pod_axis)  # int8 wire
-            s_all = jax.lax.all_gather(qz.scale, self.pod_axis)
+            # audit: collective-ok int8 wire gather; sum is ordered
+            q_all = jax.lax.all_gather(qz.q, self.pod_axis)
+            s_all = jax.lax.all_gather(qz.scale, self.pod_axis)  # audit: collective-ok
             dv_sum = jnp.sum(q_all.astype(jnp.float32)
                              * s_all.reshape((-1,) + (1,) * dv.ndim),
                              axis=0)
         elif self.deterministic:
+            # audit: collective-ok ordered gather-sum (bit-stable)
             dv_sum = jnp.sum(jax.lax.all_gather(dv, self.pod_axis), axis=0)
         else:
+            # audit: collective-ok deterministic=False path only
             dv_sum = jax.lax.psum(dv, self.pod_axis)
         return v_in + dv_sum
 

@@ -193,7 +193,9 @@ class SolverPlan:
     ``score`` is the analytic bytes-per-effective-epoch (lower is
     better; comparable only within one workload x topology).
     ``reason`` carries the misfit string for "xla" routes and the
-    decision rationale otherwise.
+    decision rationale otherwise; ``reason_code`` its stable
+    `kernels.ops.MisfitCode` ("" when the geometry fits) so tools can
+    key on the verdict without parsing prose.
     """
     solver: str
     route: str
@@ -202,6 +204,7 @@ class SolverPlan:
     nnz_multiple: int             # 0 = no row-width padding needed
     feature_shard: bool
     reason: str = ""
+    reason_code: str = ""
     origin: str = "static"
     score: float = 0.0
     probe_s: float = -1.0         # timed probe epoch seconds (-1 = none)
@@ -376,7 +379,8 @@ def _routed_plan(sig: WorkloadSignature, topo: Topology, bucket: int,
     plan = SolverPlan(
         solver=solver, route=route, bucket=bucket, chunks=chunks,
         nnz_multiple=nnz_multiple, feature_shard=feature_shard,
-        reason=reason or "fits", origin=origin)
+        reason=str(reason or "fits"),
+        reason_code=getattr(reason, "code", ""), origin=origin)
     return dataclasses.replace(plan, score=plan_cost(sig, topo, plan))
 
 

@@ -25,6 +25,36 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
+class MisfitCode:
+    """Stable enum-style codes for kernel misfit reasons.
+
+    The human-readable reason strings below are free to change
+    wording; tools (the planner's `SolverPlan.reason_code`, BENCH json
+    consumers, the static auditor's report) key on these instead.
+    """
+    BUCKET_INDIVISIBLE = "BUCKET_INDIVISIBLE"   # B does not divide n_local
+    ALIGNMENT = "ALIGNMENT"                     # B/nnz off the sublane tile
+    BUCKET_CAP = "BUCKET_CAP"                   # dense recursion cap B<=512
+    VMEM_V = "VMEM_V"                           # resident v over budget
+    VMEM_TOTAL = "VMEM_TOTAL"                   # total footprint over budget
+
+
+class Misfit(str):
+    """A misfit reason string carrying its stable `MisfitCode`.
+
+    Subclasses ``str`` so every existing consumer (equality and
+    substring assertions, `SolverPlan.reason`, log lines) sees the
+    plain reason text; code-aware consumers read ``.code``.
+    """
+    __slots__ = ("code",)
+    code: str
+
+    def __new__(cls, code: str, text: str) -> "Misfit":
+        self = super().__new__(cls, text)
+        self.code = code
+        return self
+
+
 def sparse_slice_width(d: int, model_lanes: int) -> int:
     """Per-lane slice width d_loc of the feature-sharded sparse kernel.
 
@@ -56,10 +86,14 @@ def sparse_solver_plan(n_local: int, nnz: int, d: int, bucket: int, *,
     default can route misfits at trace time instead of raising.
     """
     if bucket <= 0 or n_local % bucket:
-        return "xla", f"bucket={bucket} does not divide n_local={n_local}"
+        return "xla", Misfit(
+            MisfitCode.BUCKET_INDIVISIBLE,
+            f"bucket={bucket} does not divide n_local={n_local}")
     if bucket % 8 or nnz % 8:
-        return "xla", (f"(B={bucket}, nnz={nnz}) must both be multiples "
-                       f"of 8 (f32 sublane tile)")
+        return "xla", Misfit(
+            MisfitCode.ALIGNMENT,
+            f"(B={bucket}, nnz={nnz}) must both be multiples of 8 "
+            f"(f32 sublane tile)")
     d_pad = _round_up(max(d, 8), 8)
     M = max(int(model_lanes), 1)
     if (d_pad * 4 <= sdca_sparse_bucket.V_VMEM_BUDGET_BYTES
@@ -74,18 +108,21 @@ def sparse_solver_plan(n_local: int, nnz: int, d: int, bucket: int, *,
                 <= sdca_sparse_bucket.TOTAL_VMEM_BUDGET_BYTES):
             return "pallas-sharded", None
     if d_pad * 4 > sdca_sparse_bucket.V_VMEM_BUDGET_BYTES:
-        reason = (f"shared vector of d={d} features exceeds the "
-                  f"{sdca_sparse_bucket.V_VMEM_BUDGET_BYTES}-byte "
-                  f"resident-v VMEM budget")
+        text = (f"shared vector of d={d} features exceeds the "
+                f"{sdca_sparse_bucket.V_VMEM_BUDGET_BYTES}-byte "
+                f"resident-v VMEM budget")
         if M > 1:
-            reason += (f" (and its d/{M} model-axis slice does not fit "
-                       f"the sharded kernel either)")
+            text += (f" (and its d/{M} model-axis slice does not fit "
+                     f"the sharded kernel either)")
+        reason = Misfit(MisfitCode.VMEM_V, text)
     else:
         need = sdca_sparse_bucket.vmem_bytes_estimate(bucket, nnz, d_pad)
-        reason = (f"~{need}-byte VMEM footprint for (B={bucket}, "
-                  f"nnz={nnz}, d_pad={d_pad}) exceeds the "
-                  f"{sdca_sparse_bucket.TOTAL_VMEM_BUDGET_BYTES}-byte "
-                  f"total budget")
+        reason = Misfit(
+            MisfitCode.VMEM_TOTAL,
+            f"~{need}-byte VMEM footprint for (B={bucket}, "
+            f"nnz={nnz}, d_pad={d_pad}) exceeds the "
+            f"{sdca_sparse_bucket.TOTAL_VMEM_BUDGET_BYTES}-byte "
+            f"total budget")
     return "xla", reason
 
 
@@ -141,17 +178,20 @@ def dense_kernel_misfit(d: int, n_local: int, bucket: int) -> str | None:
     backend-picked "auto" path, like `sparse_kernel_misfit`.
     """
     if bucket <= 0 or n_local % bucket:
-        return f"bucket={bucket} does not divide n_local={n_local}"
+        return Misfit(MisfitCode.BUCKET_INDIVISIBLE,
+                      f"bucket={bucket} does not divide n_local={n_local}")
     B_pad = _round_up(max(bucket, 8), 8)
     if B_pad > sdca_bucket.MAX_BUCKET:
-        return (f"bucket={bucket} exceeds the kernel's in-bucket "
-                f"recursion cap of B <= {sdca_bucket.MAX_BUCKET}")
+        return Misfit(MisfitCode.BUCKET_CAP,
+                      f"bucket={bucket} exceeds the kernel's in-bucket "
+                      f"recursion cap of B <= {sdca_bucket.MAX_BUCKET}")
     d_pad = _round_up(max(d, 8), 8)
     need = sdca_bucket.vmem_bytes_estimate(B_pad, d_pad)
     if need > sdca_bucket.TOTAL_VMEM_BUDGET_BYTES:
-        return (f"~{need}-byte VMEM footprint for (B={B_pad}, "
-                f"d_pad={d_pad}) exceeds the "
-                f"{sdca_bucket.TOTAL_VMEM_BUDGET_BYTES}-byte budget")
+        return Misfit(MisfitCode.VMEM_TOTAL,
+                      f"~{need}-byte VMEM footprint for (B={B_pad}, "
+                      f"d_pad={d_pad}) exceeds the "
+                      f"{sdca_bucket.TOTAL_VMEM_BUDGET_BYTES}-byte budget")
     return None
 
 
@@ -359,6 +399,7 @@ def sdca_sparse_sharded_subepoch(obj: Objective, idx, val, yl, al, v0,
     nb = n_local // B
 
     if model_axis is not None:
+        # audit: collective-ok lane id seeds the lo carry (threaded below)
         lane_ix = jax.lax.axis_index(model_axis).astype(jnp.int32)
     else:
         lane_ix = jnp.int32(0 if lane is None else lane)
@@ -388,7 +429,8 @@ def sdca_sparse_sharded_subepoch(obj: Objective, idx, val, yl, al, v0,
         w_loc = sdca_sparse_bucket.sdca_sparse_gather_bucket(
             idx_t, v_loc, lo, interpret, source)
         if model_axis is not None and M > 1:
-            gathered = jax.lax.all_gather(w_loc, model_axis)  # (M, B, nnz)
+            # audit: collective-ok all-gather + owner-select (no psum)
+            gathered = jax.lax.all_gather(w_loc, model_axis)
             owner = (idx_t // jnp.int32(d_loc)).astype(jnp.int32)
             w = jnp.take_along_axis(gathered, owner[None], axis=0)[0]
         else:

@@ -1,12 +1,15 @@
 """Docs gate: markdown link check + README quickstart smoke test.
 
-Stdlib-only (CI runs it before any heavyweight install). Two checks:
+Stdlib-only (CI runs it before any heavyweight install). Three checks:
 
 1. every relative link target in the repo's ``*.md`` files (root and
    ``docs/``) must exist on disk, and in-page ``#anchor`` fragments
    must match a heading in the target file (GitHub slug rules);
 2. the first ``python`` code fence in README.md — the quickstart — is
-   executed; it must run to completion without raising.
+   executed; it must run to completion without raising;
+3. the audit rule-ID tables in DESIGN.md (S14) and docs/analysis.md
+   must stay in sync with the registry in ``repro.analysis.rules``
+   (every registered ID documented in both; no stale IDs documented).
 
 External ``http(s)://`` links are not fetched (no network flakiness in
 CI); they are only checked for obvious malformation (empty target).
@@ -62,6 +65,30 @@ def check_links() -> list[str]:
     return errors
 
 
+def check_rule_tables() -> list[str]:
+    """DESIGN.md S14 + docs/analysis.md vs `repro.analysis.rules`.
+
+    The rules module is stdlib-only (no jax), so this import is safe in
+    the docs job's bare environment.
+    """
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.analysis.rules import RULES
+
+    rule_like = re.compile(r"\b(?:JAX|LINT|VMEM)-[A-Z][A-Z-]+\b")
+    errors = []
+    for rel in ("DESIGN.md", "docs/analysis.md"):
+        text = (ROOT / rel).read_text()
+        mentioned = set(rule_like.findall(text))
+        for rid in RULES:
+            if rid not in mentioned:
+                errors.append(f"{rel}: rule {rid} missing from the "
+                              f"rule-ID table")
+        for rid in sorted(mentioned - set(RULES)):
+            errors.append(f"{rel}: documents unknown rule {rid} "
+                          f"(stale? registry is repro.analysis.rules)")
+    return errors
+
+
 def run_quickstart() -> None:
     """Extract README's first python fence and exec it (raises on failure)."""
     readme = (ROOT / "README.md").read_text()
@@ -86,7 +113,11 @@ def main(argv: list[str] | None = None) -> int:
         print(f"BROKEN LINK: {e}", file=sys.stderr)
     print(f"link check: {len(_md_files())} files, "
           f"{len(errors)} broken link(s)")
-    if errors:
+    rule_errors = check_rule_tables()
+    for e in rule_errors:
+        print(f"RULE TABLE: {e}", file=sys.stderr)
+    print(f"rule-table check: {len(rule_errors)} mismatch(es)")
+    if errors or rule_errors:
         return 1
     if not args.no_quickstart:
         run_quickstart()
