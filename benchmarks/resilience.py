@@ -1,0 +1,97 @@
+"""Recovery-overhead microbench (DESIGN.md S15).
+
+Three arms over one streamed cache, same geometry, deterministic=True:
+
+* ``clean``      — the baseline: no journal, no injector, no monitor.
+* ``journaled``  — mid-epoch journal armed (`journal_every=1`, the
+  most paranoid setting); measures what crash safety costs per epoch.
+* ``resumed``    — the journaled run killed mid-epoch, then resumed by
+  a fresh Session; wall time is crash + resume TOGETHER, so
+  ``overhead_vs_clean`` is the true price of the whole incident.
+
+The fault-free contract says ``journaled``'s overhead comes only from
+its snapshot writes (no extra host syncs), and ``clean`` pays nothing
+at all — CI records ``overhead_vs_clean`` in the BENCH json so a
+regression that sneaks per-chunk work into the hot loop shows up as a
+ratio drift, not just a slow run.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import jax.numpy as jnp
+
+from repro.api import Session
+from repro.core import EngineConfig
+from repro.data import registry
+from repro.resilience import FaultInjector, SimulatedCrash
+
+from .common import emit
+
+HEADER = ["bench", "variant", "epochs", "wall_s", "s_per_epoch",
+          "overhead_vs_clean"]
+
+
+def _cfg() -> EngineConfig:
+    return EngineConfig.make(pods=2, lanes=2, bucket=8, chunks=4,
+                             partition="hierarchical",
+                             deterministic=True, local_solver="xla")
+
+
+def _session(cache, **kw) -> Session:
+    s = Session(cache, cfg=_cfg(), lam=1e-3, objective="logistic",
+                streamed=True, **kw)
+    s._epoch_fn(s.alpha, s.v, jnp.int32(0))    # warm the jit
+    return s
+
+
+def run(quick: bool = True):
+    epochs = 4 if quick else 12
+    n = 2048 if quick else 16384
+    root = tempfile.mkdtemp(prefix="resilience-bench-")
+
+    def mk():
+        return registry.materialize("synthetic-dense", root, bucket=8,
+                                    pods=2, n=n, d=128, pad_multiple=256)
+
+    rows = []
+
+    def _row(variant, wall, done, clean_wall=None):
+        rows.append(dict(
+            bench="resilience", variant=variant, epochs=done,
+            wall_s=wall, s_per_epoch=wall / max(done, 1),
+            overhead_vs_clean=(wall / clean_wall if clean_wall else 1.0)))
+
+    # one throwaway fit warms every per-epoch compilation process-wide
+    # so the three timed arms compare steady-state epoch cost only
+    _session(mk()).fit(until=epochs, tol=0)
+
+    s = _session(mk())
+    t0 = time.perf_counter()
+    s.fit(until=epochs, tol=0)
+    clean = time.perf_counter() - t0
+    _row("clean", clean, epochs)
+
+    s = _session(mk(), journal_dir=root + "/journal-steady")
+    t0 = time.perf_counter()
+    s.fit(until=epochs, tol=0)
+    _row("journaled", time.perf_counter() - t0, epochs, clean)
+
+    kill = FaultInjector(f"kill@e{epochs // 2}c2")
+    jd = root + "/journal-crash"
+    s = _session(mk(), journal_dir=jd, faults=kill)
+    t0 = time.perf_counter()
+    try:
+        s.fit(until=epochs, tol=0)
+    except SimulatedCrash:
+        pass
+    resumed = _session(mk(), journal_dir=jd)
+    resumed.fit(until=epochs, tol=0)
+    _row("resumed", time.perf_counter() - t0, epochs, clean)
+
+    return emit(rows, HEADER)
+
+
+if __name__ == "__main__":
+    run()

@@ -17,7 +17,7 @@ import traceback
 
 from . import (fig1_wild_convergence, fig2_scaling_partitions,
                fig3_convergence, fig4_strong_scaling, fig5_ablations,
-               fig6_solvers, roofline)
+               fig6_solvers, resilience, roofline)
 
 # Bump when a figure's WORKLOAD changes (new arms, different sizes):
 # benchmarks/compare.py only diffs runs with equal workload versions,
@@ -27,7 +27,9 @@ from . import (fig1_wild_convergence, fig2_scaling_partitions,
 # v4: fig6 feature-sharded sparse arm (webspam-shaped, model-axis mesh).
 # v5: fig6 planner arm ($REPRO_PLAN=probe geometry search, chosen
 #     SolverPlan emitted under figures[...]["plans"]).
-WORKLOAD_VERSION = 5
+# v6: resilience arm (journal + kill-and-resume recovery overhead,
+#     emitted under figures[...]["recovery"]).
+WORKLOAD_VERSION = 6
 
 BENCHES = [
     ("fig1_wild_convergence", fig1_wild_convergence),
@@ -36,6 +38,7 @@ BENCHES = [
     ("fig4_strong_scaling", fig4_strong_scaling),
     ("fig5_ablations", fig5_ablations),
     ("fig6_solvers", fig6_solvers),
+    ("resilience", resilience),
     ("roofline", roofline),
 ]
 
@@ -102,6 +105,14 @@ def main(argv=None) -> int:
                  for r in rows if r.get("plan") is not None]
         if plans:
             figures[name]["plans"] = plans
+        # recovery-overhead ratios from the resilience arm: CI watches
+        # the fault-free hot loop stay free and resume stay ~one-epoch
+        recovery = [{k: r.get(k) for k in ("variant", "wall_s",
+                                           "overhead_vs_clean")}
+                    for r in rows if r.get("overhead_vs_clean")
+                    is not None]
+        if recovery:
+            figures[name]["recovery"] = recovery
         print(f"----- {name}: {len(rows)} rows in {dt:.1f}s")
 
     print(f"\nbenchmarks complete: {total} rows"

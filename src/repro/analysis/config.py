@@ -54,6 +54,12 @@ COLLECTIVE_CALL_NAMES = frozenset({
     "all_to_all", "ppermute", "pshuffle", "axis_index",
 })
 
+#: The marker an error-swallowing broad except handler must carry
+#: (LINT-BARE-EXCEPT), on the ``except`` line or the line above, with
+#: a short justification after it:
+#:     except Exception:   # audit: except-ok stale plan cache entry
+EXCEPT_MARKER = "audit: except-ok"
+
 #: Files that must each contain a raise_on_duplicate_nonzeros call —
 #: the CSR no-duplicate-nonzero invariant's entry altitudes
 #: (LINT-CSR-ENTRY).

@@ -48,6 +48,7 @@ def _summ(eqn) -> str:
     try:
         from jax._src import source_info_util
         return source_info_util.summarize(eqn.source_info)
+    # audit: except-ok best-effort anchor; empty string is the fallback
     except Exception:                     # pragma: no cover - jax-version
         return ""
 
@@ -59,6 +60,7 @@ def _is_int(var) -> bool:
         return False
     try:
         return bool(jnp.issubdtype(dtype, jnp.integer))
+    # audit: except-ok extension dtypes simply aren't ints
     except Exception:                     # pragma: no cover - ext dtypes
         return False
 

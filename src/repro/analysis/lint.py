@@ -17,6 +17,9 @@ Rules (registry: `analysis.rules`):
   in live modules.
 * LINT-CSR-ENTRY — each CSR entry altitude still calls
   ``raise_on_duplicate_nonzeros``.
+* LINT-BARE-EXCEPT — no bare ``except:`` and no error-swallowing
+  ``except Exception`` without the ``# audit: except-ok`` marker in
+  live modules.
 """
 from __future__ import annotations
 
@@ -29,7 +32,7 @@ from .rules import Finding
 
 __all__ = ["run_lint", "default_sources", "check_kernel_contracts",
            "check_collective_markers", "check_unseeded_rng",
-           "check_csr_entries"]
+           "check_csr_entries", "check_bare_except"]
 
 #: numpy.random attributes that are explicitly seeded constructors
 #: (everything else on np.random is the legacy global-state API).
@@ -181,6 +184,71 @@ def check_unseeded_rng(path: str, source: str) -> list[Finding]:
     return found
 
 
+#: exception names in an `except` clause that count as "broad".
+_BROAD_EXC = frozenset({"Exception", "BaseException"})
+
+
+def _broad_names(node: ast.AST) -> list[str]:
+    """Broad exception-class names in an except clause's type
+    expression (handles bare names, module attributes, and tuples)."""
+    if node is None:
+        return []
+    if isinstance(node, ast.Tuple):
+        return [n for elt in node.elts for n in _broad_names(elt)]
+    chain = _attr_chain(node)
+    if chain and chain[-1] in _BROAD_EXC:
+        return [chain[-1]]
+    return []
+
+
+def check_bare_except(path: str, source: str) -> list[Finding]:
+    """LINT-BARE-EXCEPT over one live file.
+
+    Bare ``except:`` is always a finding.  ``except Exception`` /
+    ``except BaseException`` (alone or inside a tuple) is a finding
+    when the handler body contains no ``raise`` — i.e. it swallows the
+    error — unless the except line (or the line above) carries the
+    ``# audit: except-ok`` marker.  Handlers that re-raise are fine:
+    they narrow or annotate, they don't swallow.
+    """
+    tree = _parse(path, source)
+    if tree is None:
+        return []
+    lines = source.splitlines()
+    found: list[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        ln = node.lineno
+        if node.type is None:
+            found.append(Finding(
+                rules.LINT_BARE_EXCEPT,
+                "bare `except:` catches SystemExit/KeyboardInterrupt "
+                "and the SimulatedCrash fault sentinel; name the "
+                "exceptions (or `except Exception` with a "
+                f"'# {config.EXCEPT_MARKER}' marker)",
+                where=f"{path}:{ln}"))
+            continue
+        broad = _broad_names(node.type)
+        if not broad:
+            continue
+        swallows = not any(isinstance(sub, ast.Raise)
+                           for sub in ast.walk(node))
+        if not swallows:
+            continue
+        window = lines[max(ln - 2, 0):ln]
+        if any(config.EXCEPT_MARKER in s for s in window):
+            continue
+        found.append(Finding(
+            rules.LINT_BARE_EXCEPT,
+            f"`except {broad[0]}` swallows the error (no raise in "
+            f"the handler) without a '# {config.EXCEPT_MARKER}' "
+            f"marker on the except line or the line above; swallow "
+            f"sites must be enumerated, justified recovery decisions",
+            where=f"{path}:{ln}"))
+    return found
+
+
 def check_csr_entries(sources: Mapping[str, str]) -> list[Finding]:
     """LINT-CSR-ENTRY: each configured altitude file must contain at
     least one call to `raise_on_duplicate_nonzeros`."""
@@ -226,6 +294,7 @@ def resolve_contract_refs(contracts: Optional[Mapping] = None,
                 fn = getattr(importlib.import_module(mod), attr)
                 if not callable(fn):
                     raise TypeError(f"{ref} is not callable")
+            # audit: except-ok a broken ref IS the reported finding
             except Exception as e:
                 found.append(Finding(
                     rules.LINT_KERNEL_CONTRACT,
@@ -268,6 +337,9 @@ def run_lint(sources: Optional[Mapping[str, str]] = None, *,
     if on(rules.LINT_UNSEEDED_RNG):
         for path, src in sources.items():
             found += check_unseeded_rng(path, src)
+    if on(rules.LINT_BARE_EXCEPT):
+        for path, src in sources.items():
+            found += check_bare_except(path, src)
     if on(rules.LINT_CSR_ENTRY):
         found += check_csr_entries(sources)
     return found

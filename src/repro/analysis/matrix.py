@@ -145,6 +145,7 @@ def trace_case(case: AuditCase) -> list[Finding]:
     (the auditor must never silently skip a case)."""
     try:
         closed = case.trace()
+    # audit: except-ok a trace failure is converted into a finding
     except Exception as e:
         return [Finding(
             rules.JAX_LOOP_CLOSURE,

@@ -15,7 +15,7 @@ __all__ = [
     "Rule", "Finding", "RULES",
     "JAX_PSUM_EXCHANGE", "JAX_LOOP_CLOSURE", "JAX_NONDET_PRIM",
     "LINT_KERNEL_CONTRACT", "LINT_RAW_COLLECTIVE", "LINT_UNSEEDED_RNG",
-    "LINT_CSR_ENTRY", "VMEM_PLAN_BUDGET",
+    "LINT_CSR_ENTRY", "LINT_BARE_EXCEPT", "VMEM_PLAN_BUDGET",
 ]
 
 JAX_PSUM_EXCHANGE = "JAX-PSUM-EXCHANGE"
@@ -25,6 +25,7 @@ LINT_KERNEL_CONTRACT = "LINT-KERNEL-CONTRACT"
 LINT_RAW_COLLECTIVE = "LINT-RAW-COLLECTIVE"
 LINT_UNSEEDED_RNG = "LINT-UNSEEDED-RNG"
 LINT_CSR_ENTRY = "LINT-CSR-ENTRY"
+LINT_BARE_EXCEPT = "LINT-BARE-EXCEPT"
 VMEM_PLAN_BUDGET = "VMEM-PLAN-BUDGET"
 
 
@@ -112,6 +113,20 @@ RULES: dict[str, Rule] = {r.id: r for r in (
         "PR 4 review rounds added the check at both altitudes after "
         "duplicate synthetic rows broke the bitwise contract; losing "
         "either call reopens the hole for ad-hoc arrays."),
+    Rule(
+        LINT_BARE_EXCEPT, "lint",
+        "No live module may contain a bare `except:` or an `except "
+        "Exception/BaseException` handler that swallows the error "
+        "(no re-raise) without an explicit '# audit: except-ok' "
+        "marker: every swallow site is an enumerated, reviewed "
+        "recovery decision, and injected faults must surface through "
+        "the typed resilience layer instead of dying silently.",
+        "PR 9's fault-injection campaign: recovery machinery is built "
+        "on typed errors (TileCorruptionError, FaultInjectedIOError) "
+        "and a BaseException crash sentinel; one anonymous "
+        "`except Exception: pass` between the fault site and the "
+        "resilience layer turns a recoverable fault into silent "
+        "state corruption."),
     Rule(
         VMEM_PLAN_BUDGET, "budget",
         "No plan the planner can emit (any candidate geometry over "

@@ -158,6 +158,29 @@ _UNSEEDED_RNG = textwrap.dedent("""\
         return good + np.random.rand(*shape)
     """)
 
+_SWALLOWED_EXCEPT = textwrap.dedent("""\
+    def load(path):
+        try:
+            return open(path).read()
+        except Exception:
+            return None
+    """)
+
+_MARKED_EXCEPT = textwrap.dedent("""\
+    def load(path):
+        try:
+            return open(path).read()
+        # audit: except-ok missing file means empty payload, by design
+        except Exception:
+            return None
+
+    def narrow(path):
+        try:
+            return open(path).read()
+        except Exception as e:
+            raise RuntimeError(path) from e
+    """)
+
 
 def check_kernel_contract() -> None:
     """Synthesized pallas_call entry point that is not in
@@ -199,6 +222,20 @@ def check_unseeded_rng() -> None:
             f"{[str(f) for f in got]}")
 
 
+def check_bare_except() -> None:
+    """Error-swallowing `except Exception` -> LINT-BARE-EXCEPT; the
+    marked twin and the re-raising handler both pass, and a bare
+    `except:` fires regardless of markers."""
+    path = "src/repro/x.py"
+    _expect(lint.check_bare_except(path, _SWALLOWED_EXCEPT),
+            rules.LINT_BARE_EXCEPT, "swallowing except Exception")
+    _expect_clean(lint.check_bare_except(path, _MARKED_EXCEPT),
+                  "marked swallow + re-raising handler")
+    bare = _SWALLOWED_EXCEPT.replace("except Exception:", "except:")
+    _expect(lint.check_bare_except(path, bare),
+            rules.LINT_BARE_EXCEPT, "bare except")
+
+
 def check_csr_entry() -> None:
     """CSR altitude file stripped of raise_on_duplicate_nonzeros ->
     LINT-CSR-ENTRY."""
@@ -223,6 +260,7 @@ SELFTESTS: dict[str, Callable[[], None]] = {
     rules.LINT_RAW_COLLECTIVE: check_raw_collective,
     rules.LINT_UNSEEDED_RNG: check_unseeded_rng,
     rules.LINT_CSR_ENTRY: check_csr_entry,
+    rules.LINT_BARE_EXCEPT: check_bare_except,
 }
 
 

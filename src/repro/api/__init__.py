@@ -16,6 +16,9 @@ from .deprecation import ReproDeprecationWarning, warn_deprecated
 from .estimators import (GLMEstimator, LinearSVC, LogisticRegression,
                          NotFittedError, Ridge, load)
 from .session import Session, margins
+# resilience surface (repro.resilience re-exported here so the fault-
+# tolerant knobs live next to the estimators that take them)
+from repro.resilience import HealthMonitor, HealthPolicy
 
 __all__ = [
     "BenchmarkRecorder", "Callback", "CheckpointHook", "EarlyStopping",
@@ -24,4 +27,5 @@ __all__ = [
     "GLMEstimator", "LinearSVC", "LogisticRegression", "NotFittedError",
     "Ridge", "load",
     "Session", "margins",
+    "HealthMonitor", "HealthPolicy",
 ]

@@ -85,7 +85,8 @@ class GLMEstimator:
                  seed: int = 0, gap_every: int = 0, verbose: bool = False,
                  streamed: bool = False, cache_dir=None, data_dir=None,
                  n_features: Optional[int] = None,
-                 callbacks: Optional[Sequence] = None):
+                 callbacks: Optional[Sequence] = None,
+                 health=None, journal_dir=None):
         self.lam = lam
         self.max_epochs = max_epochs
         self.tol = tol
@@ -108,6 +109,11 @@ class GLMEstimator:
         self.data_dir = data_dir
         self.n_features = n_features
         self.callbacks = callbacks
+        # resilience knobs (DESIGN.md S15): `health` is a HealthPolicy/
+        # True for the numerical-health guard, `journal_dir` enables
+        # crash-safe epochs on streamed fits — both forwarded to Session
+        self.health = health
+        self.journal_dir = journal_dir
         self._resume_state: Optional[dict[str, Any]] = None
 
     # -- sklearn parameter protocol ---------------------------------------
@@ -163,7 +169,8 @@ class GLMEstimator:
         kw = dict(objective=self._objective, lam=self.lam,
                   cfg=self.engine_config(), streamed=self.streamed,
                   cache_dir=self.cache_dir, data_dir=self.data_dir,
-                  bucket=self.bucket)
+                  bucket=self.bucket, health=self.health,
+                  journal_dir=self.journal_dir)
         if isinstance(X, str) or hasattr(X, "gather_buckets") \
                 or hasattr(X, "fetch"):
             if y is not None:

@@ -116,7 +116,9 @@ class Session:
                  bucket: Optional[int] = None, streamed: bool = False,
                  cache_dir=None, data_dir=None, n: Optional[int] = None,
                  nnz_multiple: Optional[int] = None,
-                 pad: bool = True, jit_step: bool = True):
+                 pad: bool = True, jit_step: bool = True,
+                 health=None, journal_dir=None, journal_every: int = 1,
+                 faults=None):
         self.spec = as_engine_config(cfg) if cfg is not None \
             else EngineConfig()
         self.cfg = cfg if cfg is not None else self.spec
@@ -125,6 +127,21 @@ class Session:
         self.feed = None
         self.solver_plan = None       # set when "auto" routes via planner
         self.history: list[dict[str, float]] = []
+        # resilience runtime (DESIGN.md S15) — all opt-in, all zero
+        # overhead when left at the defaults.  `health` is a
+        # HealthPolicy/HealthMonitor (or True for the defaults) that
+        # fit() turns into a monitor callback; `journal_dir` enables
+        # the crash-safe epoch journal; `faults` injects a deterministic
+        # FaultInjector (tests), defaulting to $REPRO_FAULTS.
+        from repro.resilience import EpochJournal, FaultInjector
+        self._health = health
+        self._damp = 1.0
+        self._jit_step = jit_step
+        self._faults = (faults if faults is not None
+                        else FaultInjector.from_env())
+        self._journal = (EpochJournal(journal_dir, every=journal_every,
+                                      injector=self._faults)
+                         if journal_dir is not None else None)
 
         # `Session((X, y))` / `Session(((idx, val), y))` sugar — only
         # when the second element is labels-shaped (1-D), so a
@@ -153,6 +170,16 @@ class Session:
             self._init_from_arrays(data, y, objective=objective, lam=lam,
                                    d=d, bucket=bucket, pad=pad,
                                    jit_step=jit_step)
+        if self._journal is not None:
+            # restart path: pick up the last committed epoch state, so
+            # a re-constructed Session (new process after a crash)
+            # continues exactly where the journal says — any mid-epoch
+            # inflight record is consumed by the streamed loop itself
+            got = self._journal.load_epoch(self.alpha, self.v)
+            if got is not None:
+                alpha, v, done = got
+                self.alpha, self.v = jnp.asarray(alpha), jnp.asarray(v)
+                self.epochs_done = done
 
     # -- construction: one per data source --------------------------------
 
@@ -269,16 +296,7 @@ class Session:
             lanes=dep.lanes, mode=algo.partition, seed=algo.seed,
             redeal_frac=algo.redeal_frac)
         self._init_state()
-        if sparse:
-            self._epoch_fn = jax.jit(
-                lambda a, v, e: engine.sim_epoch_sparse(
-                    self.obj, self.idx, self.val, self.y, a, v, self.lam,
-                    self.plan, self.bplan, self.spec, e))
-        else:
-            self._epoch_fn = jax.jit(
-                lambda a, v, e: engine.sim_epoch_dense(
-                    self.obj, self.X, self.y, a, v, self.lam,
-                    self.plan, self.bplan, self.spec, e))
+        self._rebuild_epoch_fn()
 
     def _init_from_cache(self, cache, *, objective, lam, streamed,
                          jit_step) -> None:
@@ -356,9 +374,7 @@ class Session:
             lanes=dep.lanes, mode=algo.partition, seed=algo.seed,
             redeal_frac=algo.redeal_frac)
         self._init_state()
-        self._epoch_fn = engine.make_streamed_epoch(
-            self.obj, self.spec, self.plan, self.feed, lam=self.lam,
-            jit_step=jit_step)
+        self._rebuild_epoch_fn()
 
     def _init_from_registry(self, name, *, objective, lam, bucket,
                             streamed, cache_dir, data_dir, n, d,
@@ -402,6 +418,36 @@ class Session:
         self.v = jnp.zeros(self.d, jnp.float32)
         self.epochs_done = 0
 
+    def _rebuild_epoch_fn(self) -> None:
+        """(Re)compile the epoch program from the current spec/damp —
+        called at construction and by health remedies (solver reroute,
+        damping) that change how an epoch runs."""
+        if self.feed is not None:
+            self._epoch_fn = engine.make_streamed_epoch(
+                self.obj, self.spec, self.plan, self.feed, lam=self.lam,
+                jit_step=self._jit_step, journal=self._journal,
+                damp=self._damp)
+        elif self.sparse:
+            self._epoch_fn = jax.jit(
+                lambda a, v, e: engine.sim_epoch_sparse(
+                    self.obj, self.idx, self.val, self.y, a, v, self.lam,
+                    self.plan, self.bplan, self.spec, e,
+                    dv_scale_mul=self._damp))
+        else:
+            self._epoch_fn = jax.jit(
+                lambda a, v, e: engine.sim_epoch_dense(
+                    self.obj, self.X, self.y, a, v, self.lam,
+                    self.plan, self.bplan, self.spec, e,
+                    dv_scale_mul=self._damp))
+
+    def _switch_local_solver(self, kind: str) -> None:
+        """Reroute the local solver (the health guard's pallas→xla
+        fallback — `_auto_fallback`'s warn-and-reroute idiom, made
+        stateful) and rebuild the epoch program."""
+        algo = dataclasses.replace(self.spec.algo, local_solver=kind)
+        self.spec = dataclasses.replace(self.spec, algo=algo)
+        self._rebuild_epoch_fn()
+
     # -- epoch-level control ----------------------------------------------
 
     def epoch(self) -> dict[str, float]:
@@ -411,10 +457,23 @@ class Session:
         `fit` the same record's 't' is rewritten to the cumulative
         fit wall-clock (one shared record, also kept in `history`)."""
         t0 = time.perf_counter()
+        if self._faults is not None:
+            # deterministic fault probes ($REPRO_FAULTS / tests):
+            # epoch-boundary kill, kernel failure on pallas routes,
+            # post-epoch NaN poisoning (the resident twin of nan-chunk)
+            self._faults.maybe_kill(self.epochs_done)
+            if self.spec.algo.local_solver != "xla":
+                self._faults.maybe_kernel_fail(self.epochs_done)
         v_prev = self.v
         self.alpha, self.v = self._epoch_fn(
             self.alpha, self.v, jnp.int32(self.epochs_done))
+        if self._faults is not None \
+                and self._faults.nan_epoch(self.epochs_done):
+            self.v = self.v * jnp.float32(float("nan"))
         self.epochs_done += 1
+        if self._journal is not None:
+            self._journal.commit_epoch(self.alpha, self.v,
+                                       self.epochs_done)
         rel = float(jnp.linalg.norm(self.v - v_prev)
                     / jnp.maximum(jnp.linalg.norm(self.v), 1e-30))
         rec = {"epoch": self.epochs_done, "rel_change": rel,
@@ -425,8 +484,8 @@ class Session:
     def fit(self, *, until: Optional[int] = None,
             max_epochs: Optional[int] = None, tol: float = 1e-3,
             gap_every: int = 0, callbacks: Sequence = (),
-            verbose: bool = False, diverge_above: float = 1e8
-            ) -> FitResult:
+            verbose: bool = False, diverge_above: float = 1e8,
+            health=None) -> FitResult:
         """Train to `until` (absolute epoch) or `max_epochs` more epochs.
 
         Stops early when the relative model change drops below `tol`
@@ -435,13 +494,34 @@ class Session:
         Re-entrant: a second `fit` continues from the current state, and
         schedules are pure functions of (seed, epoch), so
         stop/checkpoint/resume reproduces an uninterrupted run bitwise.
+
+        ``health`` (a `HealthPolicy`, `HealthMonitor`, or True for the
+        defaults; falls back to the Session's ``health=`` kwarg)
+        installs the numerical-health guard: instead of the built-in
+        break on divergence, an unhealthy epoch (or one that raises)
+        rolls back to the last healthy snapshot and is retried /
+        remediated per the policy (repro.resilience.health).
         """
         if until is None:
             until = self.epochs_done + (100 if max_epochs is None
                                         else max_epochs)
         elif max_epochs is not None:
             raise TypeError("pass either until= or max_epochs=, not both")
+        from repro.resilience import HealthMonitor, HealthPolicy
         cbs = list(callbacks)
+        monitor = next((cb for cb in cbs
+                        if isinstance(cb, HealthMonitor)), None)
+        health = health if health is not None else self._health
+        if monitor is None and health is not None:
+            if isinstance(health, HealthMonitor):
+                monitor = health
+            elif isinstance(health, HealthPolicy):
+                monitor = HealthMonitor(health)
+            else:                      # health=True -> default policy
+                monitor = HealthMonitor()
+            # first in line: it must see (and repair) the state before
+            # other callbacks consume the epoch record
+            cbs.insert(0, monitor)
         for cb in cbs:
             bind = getattr(cb, "bind", None)
             if bind is not None:
@@ -452,7 +532,17 @@ class Session:
         t0 = time.perf_counter()
         converged = diverged = False
         while self.epochs_done < until:
-            rec = self.epoch()
+            try:
+                rec = self.epoch()
+            except Exception as err:
+                # Only a health monitor may absorb an epoch failure —
+                # it rolls back and remediates, re-raising when the
+                # policy is exhausted.  SimulatedCrash is a
+                # BaseException precisely so it can never land here.
+                if monitor is None:
+                    raise
+                monitor.on_epoch_error(err)
+                continue
             # mutate the record in place so self.history and the
             # returned FitResult.history stay the SAME objects
             rec["t"] = time.perf_counter() - t0
@@ -460,9 +550,11 @@ class Session:
                 gap_every and self.epochs_done % gap_every == 0)
             vmax = float(jnp.max(jnp.abs(self.v)))
             if not np.isfinite(vmax) or vmax > diverge_above:
-                diverged = True
-                history.append(rec)
-                break
+                if monitor is None:
+                    diverged = True
+                    history.append(rec)
+                    break
+                want_gap = False       # gap over non-finite v is noise
             if want_gap:
                 rec["gap"] = self.gap()
             history.append(rec)
@@ -479,6 +571,8 @@ class Session:
                 break
             if stop:
                 break
+        if monitor is not None and monitor.gave_up:
+            diverged = True
         if not history:
             # until <= epochs_done (e.g. a loaded estimator that already
             # used its budget): report the CURRENT state honestly rather

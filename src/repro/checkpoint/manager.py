@@ -56,9 +56,17 @@ def save_tree(path: pathlib.Path, tree, *, meta: Optional[dict] = None
     """Atomic single-file save of a pytree (+ meta.json).
 
     Leaves are stored as raw bytes with (dtype, shape) metadata so
-    non-native dtypes (bfloat16, fp8) round-trip through .npz."""
+    non-native dtypes (bfloat16, fp8) round-trip through .npz.
+
+    Overwrite protocol: stage into .tmp.<name>, swap the live dir to
+    .old.<name>, rename tmp into place, then drop .old — so at every
+    instant either <name> or .old.<name> holds a COMPLETE checkpoint
+    and `restore_tree` can always find one (torn-write safety; the old
+    rmtree-then-rename left a window with neither)."""
     path = pathlib.Path(path)
     tmp = path.with_name(f".tmp.{path.name}")
+    old = path.with_name(f".old.{path.name}")
+    shutil.rmtree(tmp, ignore_errors=True)    # stale tmp from a crash
     tmp.mkdir(parents=True, exist_ok=True)
     flat = _flatten(tree)
     manifest = [{"key": k, "dtype": str(v.dtype), "shape": list(v.shape)}
@@ -69,16 +77,26 @@ def save_tree(path: pathlib.Path, tree, *, meta: Optional[dict] = None
     (tmp / "keys.json").write_text(json.dumps(manifest))
     (tmp / "meta.json").write_text(json.dumps(meta or {}))
     if path.exists():
-        shutil.rmtree(path)
+        shutil.rmtree(old, ignore_errors=True)
+        path.rename(old)
     tmp.rename(path)
+    shutil.rmtree(old, ignore_errors=True)
 
 
 def restore_tree(path: pathlib.Path, target, *, shardings=None
                  ) -> tuple[Any, dict]:
     """Restore into the structure of `target` (a pytree of arrays or
     ShapeDtypeStructs).  `shardings`: optional matching pytree of
-    NamedSharding to place leaves onto a (possibly different) mesh."""
+    NamedSharding to place leaves onto a (possibly different) mesh.
+
+    Falls back to the .old.<name> sibling when <name> is missing or
+    torn (no keys.json) — the save_tree swap protocol guarantees one
+    of the two is complete after any crash."""
     path = pathlib.Path(path)
+    if not (path / "keys.json").exists():
+        old = path.with_name(f".old.{path.name}")
+        if (old / "keys.json").exists():
+            path = old
     manifest = json.loads((path / "keys.json").read_text())
     with np.load(path / "arrays.npz") as z:
         flat = {m["key"]: np.frombuffer(

@@ -877,6 +877,8 @@ def sim_epoch_dense(
     spec,                      # EngineConfig (or anything .to_engine())
     epoch,
     straggler_mask: Optional[Array] = None,
+    *,
+    dv_scale_mul: float = 1.0,
 ) -> tuple[Array, Array]:
     """One simulated epoch over P*K virtual workers (dense path).
 
@@ -901,7 +903,11 @@ def sim_epoch_dense(
     solver = make_local_solver(
         spec.algo.local_solver, obj, lam * n, spec.sigma_prime(W),
         bucket=B)
-    dv_scale = (1.0 / W if spec.algo.aggregation == "averaging" else 1.0)
+    # dv_scale_mul < 1 is the health guard's "damp" remedy: CoCoA
+    # partial aggregation (gamma) applied uniformly on top of the
+    # averaging/adding choice
+    dv_scale = (1.0 / W if spec.algo.aggregation == "averaging"
+                else 1.0) * dv_scale_mul
     _, _, a_new, v_new = run_epoch(
         coll, solver, spec.algo, DenseBlock(Xl), y[ex], alpha[ex], v,
         epoch, straggler_mask=straggler_mask, redeal=False,
@@ -922,6 +928,8 @@ def sim_epoch_sparse(
     spec,
     epoch,
     straggler_mask: Optional[Array] = None,
+    *,
+    dv_scale_mul: float = 1.0,
 ) -> tuple[Array, Array]:
     """Sparse-path simulated epoch (padded CSR)."""
     spec = as_engine_config(spec)
@@ -933,7 +941,8 @@ def sim_epoch_sparse(
     solver = make_local_solver(
         spec.algo.local_solver, obj, lam * n, spec.sigma_prime(W),
         bucket=B, sparse=True)
-    dv_scale = (1.0 / W if spec.algo.aggregation == "averaging" else 1.0)
+    dv_scale = (1.0 / W if spec.algo.aggregation == "averaging"
+                else 1.0) * dv_scale_mul
     _, _, a_new, v_new = run_epoch(
         coll, solver, spec.algo, SparseBlock(idx[ex], val[ex]), y[ex],
         alpha[ex], v, epoch, straggler_mask=straggler_mask, redeal=False,
@@ -1008,6 +1017,7 @@ def run_epoch_streamed(
     alpha: Array,              # (n,) global dual, device-resident
     v: Array,                  # (d,) shared vector, device-resident
     epoch: int,
+    journal=None,              # optional resilience.EpochJournal
 ) -> tuple[Array, Array]:
     """One epoch where `run_epoch`'s chunked sub-epoch loop consumes
     host-resident chunks instead of a device-resident block.
@@ -1020,6 +1030,15 @@ def run_epoch_streamed(
     tests/test_pipeline.py) while only ever holding `chunks`-th of X on
     device.  Chunk c+1's host gather + H2D overlaps chunk c's compute
     (double buffering via a one-slot prefetch thread).
+
+    With a `journal` (resilience.EpochJournal) the loop becomes
+    crash-safe: state is snapshotted at chunk boundaries, and a
+    re-entered epoch resumes from the journaled chunk cursor — because
+    the schedule is pure in (seed, epoch), the resumed epoch replays
+    exactly the not-yet-applied chunks and finishes bitwise-identical
+    to an uninterrupted run (tests/test_resilience.py).  Without one,
+    the loop body adds two ``is None`` checks per chunk and nothing
+    else — no host sync, no checksum, zero overhead.
     """
     B = feed.bucket
     per_lane = plan.per_lane
@@ -1027,7 +1046,8 @@ def run_epoch_streamed(
         raise ValueError(f"chunks={algo.chunks} must divide per-lane "
                          f"bucket count {per_lane}")
     per_chunk = per_lane // algo.chunks
-    sched = np.asarray(plan.schedule(int(epoch)))   # (P, K, per_lane)
+    ep = int(epoch)
+    sched = np.asarray(plan.schedule(ep))           # (P, K, per_lane)
 
     def fetch(c):
         bids = sched[..., c * per_chunk:(c + 1) * per_chunk]
@@ -1039,23 +1059,38 @@ def run_epoch_streamed(
 
     v = coll.pod_replicate(v)
     v_in = v
+    start = 0
+    if journal is not None:
+        got = journal.load_inflight(ep, alpha, v, v_in)
+        if got is not None:
+            start, alpha, v, v_in = got
+            alpha, v, v_in = (jnp.asarray(alpha), jnp.asarray(v),
+                              jnp.asarray(v_in))
     with ThreadPoolExecutor(max_workers=1) as ex:
-        nxt = ex.submit(fetch, 0)
-        for c in range(algo.chunks):
+        nxt = ex.submit(fetch, start)
+        for c in range(start, algo.chunks):
+            if journal is not None:
+                journal.pre_chunk(ep, c)
             cols, data, yc = nxt.result()
             if c + 1 < algo.chunks:
                 nxt = ex.submit(fetch, c + 1)
             alpha, v = step(data, yc, cols, alpha, v)
+            if journal is not None:
+                journal.post_chunk(ep, c, alpha, v, v_in, algo.chunks)
     return alpha, coll.pod_reduce(v, v_in)
 
 
 def make_streamed_epoch(obj: Objective, spec, plan, feed: ChunkFeed, *,
-                        lam: float, jit_step: bool = True):
+                        lam: float, jit_step: bool = True,
+                        journal=None, damp: float = 1.0):
     """-> epoch_fn(alpha, v, epoch) for out-of-core training.
 
     The streamed twin of the jitted `sim_epoch_dense`/`sim_epoch_sparse`
     closure `GLMTrainer` builds: same solver, same sigma', same
     schedule, but examples arrive chunk-by-chunk through `feed`.
+    ``journal`` threads an `EpochJournal` into the chunk loop (crash
+    safety); ``damp`` is the health guard's aggressiveness multiplier
+    on dv_scale (mirrors sim_epoch_*'s dv_scale_mul).
     """
     spec = as_engine_config(spec)
     coll = _sim_coll(spec)
@@ -1065,13 +1100,14 @@ def make_streamed_epoch(obj: Objective, spec, plan, feed: ChunkFeed, *,
         bucket=feed.bucket, sparse=feed.sparse,
         source=("tile cache" if getattr(feed, "cache", None) is not None
                 else "array feed"))
-    dv_scale = (1.0 / W if spec.algo.aggregation == "averaging" else 1.0)
+    dv_scale = (1.0 / W if spec.algo.aggregation == "averaging"
+                else 1.0) * damp
     step = make_streamed_step(coll, solver, spec.algo,
                               dv_scale=dv_scale, jit=jit_step)
 
     def epoch_fn(alpha, v, epoch):
         return run_epoch_streamed(coll, feed, step, plan, spec.algo,
-                                  alpha, v, epoch)
+                                  alpha, v, epoch, journal=journal)
 
     return epoch_fn
 

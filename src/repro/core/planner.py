@@ -514,6 +514,7 @@ def probe_plans(cands: list[SolverPlan],
     for cand in cands:
         try:
             dt = float(probe_fn(cand))
+        # audit: except-ok a failed probe is warned about and skipped
         except Exception as e:            # pragma: no cover - probe-dep
             warnings.warn(f"plan probe failed for bucket={cand.bucket} "
                           f"chunks={cand.chunks}: {e}", stacklevel=2)
@@ -586,6 +587,7 @@ def load_cached_plan(sig: WorkloadSignature, topo: Topology,
         if not _plan_feasible(sig, topo, plan):
             return None
         return dataclasses.replace(plan, origin="cache")
+    # audit: except-ok unreadable/stale cache entry -> plan from scratch
     except Exception:
         return None
 
@@ -654,6 +656,7 @@ def resolve_plan(sig: WorkloadSignature, topo: Optional[Topology] = None,
         if use_cache and plan.origin != "static":
             store_plan(sig, topo, plan, cache_dir)
         return plan
+    # audit: except-ok planner failure degrades to the static plan + warn
     except Exception as e:
         warnings.warn(
             f"solver planner failed ({type(e).__name__}: {e}); falling "

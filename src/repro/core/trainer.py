@@ -128,12 +128,13 @@ class StreamedGLMTrainer(_TrainerBase):
     def __init__(self, cache, *, objective: str | Objective | None = None,
                  lam: float = 1e-3,
                  cfg: SolverConfig | EngineConfig = SolverConfig(),
-                 jit_step: bool = True):
+                 jit_step: bool = True, journal_dir=None, health=None):
         from repro.api import Session, warn_deprecated
         warn_deprecated("repro.core.StreamedGLMTrainer",
                         "repro.api.Session(cache, streamed=True)")
         self._session = Session(cache, objective=objective, lam=lam,
-                                cfg=cfg, streamed=True, jit_step=jit_step)
+                                cfg=cfg, streamed=True, jit_step=jit_step,
+                                journal_dir=journal_dir, health=health)
 
 
 def fit_dataset(name: str, *,

@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 import pathlib
 import zlib
 
@@ -42,6 +43,7 @@ import numpy as np
 
 __all__ = [
     "CACHE_MAGIC", "CACHE_VERSION", "CacheMeta", "TileCache",
+    "TileCorruptionError",
     "ArrayFeed", "TileFeed", "build_cache", "open_cache", "pad_examples",
 ]
 
@@ -50,9 +52,44 @@ CACHE_MAGIC = "repro-tile-cache"
 # and criteo sub rows are 40 wide — pre-PR4 caches hold different bytes
 # (including duplicate-nonzero rows that break the sparse Pallas
 # kernel's bitwise contract), so they must not be silently reused.
-CACHE_VERSION = 2
+# v3: per-tile crc32 sidecar (tilecrc.bin) so corruption is localized
+# to a bucket tile (TileCorruptionError carries tile id + byte offset,
+# enabling quarantine + targeted rebuild — DESIGN.md S15), and
+# meta.json is committed LAST and atomically, so an interrupted build
+# can never pass validation.
+CACHE_VERSION = 3
 
 _SUBLANE = 8          # pad d to the VPU sublane multiple
+
+_TILECRC_FILE = "tilecrc.bin"
+
+
+class TileCorruptionError(ValueError):
+    """A cache tile's bytes no longer match their recorded crc32.
+
+    Carries enough to act on (quarantine the cache, rebuild the tile
+    from source): ``path`` is the corrupt ``.bin`` file, ``array`` its
+    logical name, ``tile`` the GLOBAL bucket id of the first bad tile
+    (None when only the whole-array checksum is available), ``offset``
+    the byte offset of that tile inside the file.  Raised by
+    `open_cache(verify=True)`, `TileCache.verify_tiles`, and
+    `TileFeed(verify=True)`; classified as non-transient (no retry —
+    the bytes will not get better) by
+    `repro.resilience.ResilientChunkFeed`, which quarantines and
+    rebuilds instead.
+    """
+
+    def __init__(self, path, array: str, tile: int | None = None,
+                 offset: int | None = None):
+        self.path = pathlib.Path(path)
+        self.array = array
+        self.tile = tile
+        self.offset = offset
+        loc = (f" (tile {tile} at byte offset {offset})"
+               if tile is not None else "")
+        super().__init__(
+            f"{self.path}: crc32 mismatch for array {array!r}{loc} — "
+            f"cache is corrupt; quarantine and rebuild from source")
 
 
 def _ceil_to(x: int, m: int) -> int:
@@ -182,14 +219,42 @@ def build_cache(path, name: str, *, y, X=None, idx=None, val=None,
                      nnz=nnz, objective=objective)
     path.mkdir(parents=True, exist_ok=True)
     crcs = {}
+    tile_crcs = []
     for aname, arr in arrays.items():
         arr = np.ascontiguousarray(arr)
         crcs[aname] = zlib.crc32(arr.tobytes())
+        tile_crcs.append(_tile_crcs(arr, meta.n_buckets))
         arr.tofile(path / f"{aname}.bin")
+    # Sidecar next (arrays in array_specs order), meta.json LAST and
+    # ATOMICALLY: meta.json is the validity marker, so a build killed
+    # at any earlier point leaves a directory open_cache rejects (no
+    # meta, or a stale-version one) and registry.materialize rebuilds.
+    np.concatenate(tile_crcs).tofile(path / _TILECRC_FILE)
     doc = dict(dataclasses.asdict(meta), crc32=crcs)
-    (path / "meta.json").write_text(
-        json.dumps(doc, sort_keys=True, indent=1) + "\n")
+    tmp = path / ".meta.json.tmp"
+    tmp.write_text(json.dumps(doc, sort_keys=True, indent=1) + "\n")
+    os.replace(tmp, path / "meta.json")
     return open_cache(path)
+
+
+def _tile_crcs(arr: np.ndarray, n_buckets: int) -> np.ndarray:
+    """crc32 of each bucket tile's bytes, as little-endian uint32."""
+    flat = np.ascontiguousarray(arr).reshape(n_buckets, -1)
+    return np.array([zlib.crc32(row.tobytes()) for row in flat],
+                    dtype="<u4")
+
+
+def _load_tilecrc(path: pathlib.Path,
+                  meta: CacheMeta) -> dict[str, np.ndarray] | None:
+    """Read the per-tile crc sidecar back into {array: (n_buckets,)}."""
+    f = path / _TILECRC_FILE
+    specs = meta.array_specs()
+    want = meta.n_buckets * len(specs)
+    if not f.exists() or f.stat().st_size != want * 4:
+        return None
+    raw = np.fromfile(f, dtype="<u4", count=want)
+    return {aname: raw[i * meta.n_buckets:(i + 1) * meta.n_buckets]
+            for i, aname in enumerate(specs)}
 
 
 def open_cache(path, *, verify: bool = False) -> "TileCache":
@@ -204,6 +269,7 @@ def open_cache(path, *, verify: bool = False) -> "TileCache":
     crcs = doc.pop("crc32", {})
     meta = CacheMeta(**{f.name: doc[f.name]
                         for f in dataclasses.fields(CacheMeta)})
+    tilecrc = _load_tilecrc(path, meta)
     arrays = {}
     for aname, (shape, dtype) in meta.array_specs().items():
         f = path / f"{aname}.bin"
@@ -213,10 +279,16 @@ def open_cache(path, *, verify: bool = False) -> "TileCache":
                 f"{f}: {f.stat().st_size} bytes on disk, expected {want} "
                 f"for shape {shape} — cache is truncated or corrupt")
         mm = np.memmap(f, dtype=dtype, mode="r", shape=shape)
-        if verify and zlib.crc32(mm.tobytes()) != crcs.get(aname):
-            raise ValueError(f"{f}: crc32 mismatch — cache is corrupt")
         arrays[aname] = mm
-    return TileCache(meta=meta, path=path, arrays=arrays)
+    cache = TileCache(meta=meta, path=path, arrays=arrays, tilecrc=tilecrc)
+    if verify:
+        if tilecrc is not None:
+            cache.verify_tiles()
+        else:
+            for aname, mm in arrays.items():
+                if zlib.crc32(mm.tobytes()) != crcs.get(aname):
+                    raise TileCorruptionError(path / f"{aname}.bin", aname)
+    return cache
 
 
 @dataclasses.dataclass
@@ -225,11 +297,38 @@ class TileCache:
     meta: CacheMeta
     path: pathlib.Path
     arrays: dict[str, np.memmap]
+    tilecrc: dict[str, np.ndarray] | None = None
 
     def _flat(self, name: str) -> np.ndarray:
         """(pods, nb_pod, ...) view -> (n_buckets, ...) for id math."""
         a = self.arrays[name]
         return a.reshape((self.meta.n_buckets,) + a.shape[2:])
+
+    def verify_tiles(self, bids: np.ndarray | None = None) -> None:
+        """Check the crc32 of bucket tiles against the sidecar.
+
+        ``bids`` is a set of GLOBAL bucket ids (any shape); None means
+        every tile.  Raises `TileCorruptionError` pointing at the first
+        bad tile.  Cost scales with the bytes actually checked, so a
+        streamed feed can verify only the tiles a chunk touches.
+        """
+        if self.tilecrc is None:
+            raise ValueError(
+                f"{self.path}: no {_TILECRC_FILE} sidecar — rebuild the "
+                f"cache to enable per-tile verification")
+        ids = (np.arange(self.meta.n_buckets) if bids is None
+               else np.unique(np.asarray(bids).reshape(-1)))
+        for aname in self.meta.array_specs():
+            flat = self._flat(aname)
+            tile_nbytes = int(np.prod(flat.shape[1:])) * flat.dtype.itemsize
+            want = self.tilecrc[aname]
+            for b in ids:
+                b = int(b)
+                if zlib.crc32(np.ascontiguousarray(
+                        flat[b]).tobytes()) != int(want[b]):
+                    raise TileCorruptionError(
+                        self.path / f"{aname}.bin", aname, tile=b,
+                        offset=b * tile_nbytes)
 
     # -- bulk load (the in-memory path) ----------------------------------
     def load_arrays(self):
@@ -312,8 +411,8 @@ class TileCache:
         return ((np.ascontiguousarray(idx_s[..., :w]),
                  np.ascontiguousarray(val_s[..., :w])), y)
 
-    def feed(self) -> "TileFeed":
-        return TileFeed(self)
+    def feed(self, *, verify: bool = False) -> "TileFeed":
+        return TileFeed(self, verify=verify)
 
 
 # ---------------------------------------------------------------------------
@@ -322,16 +421,26 @@ class TileCache:
 
 
 class TileFeed:
-    """`ChunkFeed` over a `TileCache`: mmap gather + device put."""
+    """`ChunkFeed` over a `TileCache`: mmap gather + device put.
 
-    def __init__(self, cache: TileCache):
+    ``verify=True`` crc-checks exactly the tiles each fetch touches
+    against the per-tile sidecar before handing them to the engine
+    (raising `TileCorruptionError` so `ResilientChunkFeed` can
+    quarantine + rebuild).  Default off: the fault-free hot loop pays
+    zero checksum cost.
+    """
+
+    def __init__(self, cache: TileCache, *, verify: bool = False):
         self.cache = cache
+        self.verify = verify
         m = cache.meta
         self.n, self.d, self.bucket = m.n, m.d, m.bucket
         self.sparse = m.kind == "sparse"
 
     def fetch(self, bids: np.ndarray):
         import jax
+        if self.verify:
+            self.cache.verify_tiles(bids)
         data, y = self.cache.gather_buckets(bids)
         if self.sparse:
             idx, val = data

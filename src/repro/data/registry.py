@@ -239,8 +239,29 @@ def materialize(name: str, cache_dir=None, *, bucket: int = 16,
            f"-b{bucket}-p{pods}-m{mult}{nnz_key}{raw_key}"
            f"-v{tile_cache.CACHE_VERSION}")
     path = root / key
+
+    def _quarantine():
+        # Move the bad directory aside (kept for forensics under a
+        # dot-prefixed name that cache-key lookups can never match)
+        # and rebuild below.
+        import shutil
+        quarantine = path.parent / f".quarantine.{path.name}"
+        shutil.rmtree(quarantine, ignore_errors=True)
+        os.rename(path, quarantine)
+
     if (path / "meta.json").exists():
-        return tile_cache.open_cache(path)
+        try:
+            return tile_cache.open_cache(path)
+        except (ValueError, KeyError, OSError):
+            # Torn build or corrupt/stale tiles.
+            # audit: except-ok — invalid cache is quarantined and
+            # rebuilt from source; the rebuild path re-raises real
+            # failures.
+            _quarantine()
+    elif path.exists():
+        # meta.json is build_cache's final write, so a cache directory
+        # without it is a build that died mid-way: never open it.
+        _quarantine()
     ds = get_dataset(name, n=n, d=d, data_dir=data_dir)
     # build into a private temp dir and rename into place: concurrent
     # materialize calls (pytest workers, threads, parallel benchmarks)

@@ -160,6 +160,7 @@ def run_cell(arch: str, shape_name: str, mesh_name: str,
               f"{rl_show['bottleneck']} t=({rl_show['t_compute_s']:.2e},"
               f"{rl_show['t_memory_s']:.2e},{rl_show['t_collective_s']:.2e})s",
               flush=True)
+    # audit: except-ok the sweep records the failure row and moves on
     except Exception as e:
         rec.update(status="error", error=f"{type(e).__name__}: {e}",
                    traceback=traceback.format_exc()[-4000:])

@@ -125,6 +125,7 @@ def analyze(compiled, *, peak_flops: float, hbm_bw: float,
 def memory_analysis_dict(compiled) -> dict:
     try:
         ma = compiled.memory_analysis()
+    # audit: except-ok backends without memory_analysis report nothing
     except Exception:
         return {}
     if ma is None:

@@ -52,12 +52,17 @@ def glm_predict_batch(est, X, *, batch: int = 8192,
 
 
 def glm_predict_streamed(est, cache, *, gbuckets: int = 512,
-                         return_margins: bool = False) -> np.ndarray:
+                         return_margins: bool = False,
+                         verify_tiles: bool = False) -> np.ndarray:
     """Out-of-core inference: stream bucket tiles straight off the
     mmap'd cache, never holding more than `gbuckets` tiles in memory.
 
     Returns predictions (or raw margins) for the TRUE examples — the
     cache's inert padding rows are trimmed via ``meta.n_examples``.
+    ``verify_tiles`` crc-checks each tile group against the cache's
+    per-tile sidecar before serving from it (raising
+    `data.cache.TileCorruptionError` rather than emitting predictions
+    from corrupt bytes); default off — the fast path pays nothing.
     """
     from repro.api import margins as _margins
 
@@ -66,6 +71,8 @@ def glm_predict_streamed(est, cache, *, gbuckets: int = 512,
     out = []
     for start in range(0, m.n_buckets, gbuckets):
         bids = np.arange(start, min(start + gbuckets, m.n_buckets))
+        if verify_tiles:
+            cache.verify_tiles(bids)
         data, _y = cache.gather_buckets(bids)
         data = tuple(data) if m.kind == "sparse" else data
         out.append(np.asarray(_margins(est.coef_, data)))

@@ -1,0 +1,35 @@
+"""Fault-tolerant training runtime (DESIGN.md S15).
+
+Four pillars, each opt-in and zero-cost when unused:
+
+  * `EpochJournal`        — crash-safe streamed epochs: chunk-cursor +
+                            state journal; a killed run resumes at the
+                            last committed chunk boundary, bitwise.
+  * `ResilientChunkFeed`  — feed-layer retry/timeout/backoff; transient
+                            I/O is retried, `TileCorruptionError` is
+                            quarantined + rebuilt from source.
+  * `HealthPolicy` /
+    `HealthMonitor`       — numerical-health guard: non-finite or
+                            diverging state rolls back to the last
+                            healthy snapshot, then retry / damp /
+                            pallas→xla fallback.
+  * `faultinject`         — seeded deterministic fault schedules
+                            (``$REPRO_FAULTS``) proving every recovery
+                            path in CI, with a JSON event log
+                            (``$REPRO_FAULT_LOG``).
+
+Operator guide: docs/robustness.md.
+"""
+from .faultinject import (FaultInjectedIOError, FaultInjector, FaultyFeed,
+                          KernelBuildError, SimulatedCrash, log_event,
+                          parse_schedule)
+from .feed import ResilientChunkFeed
+from .health import HealthMonitor, HealthPolicy
+from .journal import EpochJournal
+
+__all__ = [
+    "EpochJournal", "ResilientChunkFeed", "HealthMonitor", "HealthPolicy",
+    "FaultInjector", "FaultyFeed", "SimulatedCrash",
+    "FaultInjectedIOError", "KernelBuildError", "parse_schedule",
+    "log_event",
+]

@@ -1,0 +1,20 @@
+"""Shared fixtures: deterministic fault injection via $REPRO_FAULTS."""
+import pytest
+
+
+@pytest.fixture
+def fault_env(monkeypatch, tmp_path):
+    """Arm a deterministic fault schedule through the environment, the
+    way an operator (or the CI chaos job) would: sets $REPRO_FAULTS,
+    $REPRO_SEED and $REPRO_FAULT_LOG, and returns the event-log path.
+
+        log = fault_env("kill@e1c2", seed=3)
+        ... run training; read log.read_text() for the event stream
+    """
+    def arm(schedule: str, seed: int = 0):
+        log = tmp_path / "fault-events.jsonl"
+        monkeypatch.setenv("REPRO_FAULTS", schedule)
+        monkeypatch.setenv("REPRO_SEED", str(seed))
+        monkeypatch.setenv("REPRO_FAULT_LOG", str(log))
+        return log
+    return arm

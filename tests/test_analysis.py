@@ -126,7 +126,7 @@ def test_selftests_all_pass():
         from repro.analysis import selftest
         failures = selftest.run_selftests()
         assert failures == [], failures
-        assert len(selftest.SELFTESTS) == 8
+        assert len(selftest.SELFTESTS) == 9
         print("OK")
         """, timeout=900)
     assert r.returncode == 0, r.stderr
@@ -201,7 +201,8 @@ def test_rules_registry_complete():
     assert set(rules.RULES) == {
         "JAX-PSUM-EXCHANGE", "JAX-LOOP-CLOSURE", "JAX-NONDET-PRIM",
         "LINT-KERNEL-CONTRACT", "LINT-RAW-COLLECTIVE",
-        "LINT-UNSEEDED-RNG", "LINT-CSR-ENTRY", "VMEM-PLAN-BUDGET"}
+        "LINT-UNSEEDED-RNG", "LINT-CSR-ENTRY", "LINT-BARE-EXCEPT",
+        "VMEM-PLAN-BUDGET"}
     for rule in rules.RULES.values():
         assert rule.invariant and rule.history
         assert rule.layer in ("jaxpr", "lint", "budget")
@@ -289,7 +290,8 @@ def test_audit_cli_lint_layer_and_report(tmp_path):
     assert set(doc["rules"]) == {
         "JAX-PSUM-EXCHANGE", "JAX-LOOP-CLOSURE", "JAX-NONDET-PRIM",
         "LINT-KERNEL-CONTRACT", "LINT-RAW-COLLECTIVE",
-        "LINT-UNSEEDED-RNG", "LINT-CSR-ENTRY", "VMEM-PLAN-BUDGET"}
+        "LINT-UNSEEDED-RNG", "LINT-CSR-ENTRY", "LINT-BARE-EXCEPT",
+        "VMEM-PLAN-BUDGET"}
 
 
 def test_audit_cli_rejects_unknown_layer():

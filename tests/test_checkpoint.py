@@ -96,6 +96,72 @@ def test_lm_restart_matches_uninterrupted(tmp_path):
     np.testing.assert_allclose(losses_full[3:], losses_b, rtol=1e-5)
 
 
+def test_save_tree_cleans_stale_tmp_from_killed_save(tmp_path):
+    """A process killed mid-save leaves a stage dir; the next save must
+    replace it, and it must never shadow the live checkpoint."""
+    stale = tmp_path / ".tmp.ck"
+    stale.mkdir()
+    (stale / "junk.bin").write_bytes(b"half a tensor")
+    save_tree(tmp_path / "ck", {"a": jnp.arange(3.0)}, meta={"step": 1})
+    out, meta = restore_tree(tmp_path / "ck", {"a": jnp.zeros(3)})
+    assert meta["step"] == 1
+    np.testing.assert_array_equal(np.asarray(out["a"]), [0.0, 1.0, 2.0])
+    assert not stale.exists()
+
+
+def test_restore_tree_falls_back_to_old_after_torn_swap(tmp_path):
+    """Crash between the swap's two renames: the live dir was moved to
+    .old.<name> but the replacement never arrived.  restore_tree must
+    serve the .old generation instead of failing on the torn target."""
+    ck = tmp_path / "ck"
+    save_tree(ck, {"a": jnp.arange(3.0)}, meta={"step": 1})
+    ck.rename(tmp_path / ".old.ck")
+    ck.mkdir()                            # half-written replacement,
+    (ck / "partial.bin").write_bytes(b"")  # no keys.json manifest
+    out, meta = restore_tree(ck, {"a": jnp.zeros(3)})
+    assert meta["step"] == 1
+    np.testing.assert_array_equal(np.asarray(out["a"]), [0.0, 1.0, 2.0])
+
+
+def test_save_tree_overwrite_is_atomic_swap(tmp_path):
+    """Re-saving over an existing checkpoint goes through the staged
+    swap: the new generation lands, no .tmp/.old debris survives."""
+    ck = tmp_path / "ck"
+    save_tree(ck, {"a": jnp.zeros(4)}, meta={"step": 1})
+    save_tree(ck, {"a": jnp.full((4,), 7.0)}, meta={"step": 2})
+    out, meta = restore_tree(ck, {"a": jnp.zeros(4)})
+    assert meta["step"] == 2
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.full(4, 7.0))
+    leftover = [p.name for p in tmp_path.iterdir() if p.name != "ck"]
+    assert leftover == []
+
+
+def test_estimator_save_over_existing_checkpoint(tmp_path):
+    """est.save onto an existing checkpoint dir swaps atomically and
+    serves the newest fit (the CheckpointHook path uses the same
+    save_tree protocol)."""
+    from repro.api import LogisticRegression
+    from repro.api import load as load_estimator
+    X, y = make_dense_classification(n=256, d=16, seed=0)
+    est = LogisticRegression(max_epochs=2, bucket=8, lanes=2,
+                             deterministic=True)
+    est.fit(np.asarray(X).T, np.asarray(y))
+    est.save(tmp_path / "est")
+    first = np.asarray(load_estimator(tmp_path / "est").coef_)
+
+    est2 = LogisticRegression(max_epochs=6, bucket=8, lanes=2,
+                              deterministic=True)
+    est2.fit(np.asarray(X).T, np.asarray(y))
+    est2.save(tmp_path / "est")
+    again = load_estimator(tmp_path / "est")
+    np.testing.assert_array_equal(np.asarray(again.coef_),
+                                  np.asarray(est2.coef_))
+    assert again.n_iter_ == 6 and not np.array_equal(
+        np.asarray(again.coef_), first)
+    assert not any(p.name.startswith((".tmp.", ".old."))
+                   for p in tmp_path.iterdir())
+
+
 def test_elastic_restore_into_resharded_target(tmp_path):
     """A checkpoint restores into a target with different shardings —
     the mesh is a property of the run, not the data (elastic restart)."""

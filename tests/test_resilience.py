@@ -1,0 +1,318 @@
+"""Fault-tolerant runtime (DESIGN.md S15): deterministic injection,
+crash-safe streamed epochs, typed corruption recovery, health rollback.
+
+The oracle throughout is the repo's bitwise-determinism contract: under
+``deterministic=True`` a recovered run must equal the uninterrupted run
+bit-for-bit, because schedules are pure functions of (seed, epoch) and
+every recovery path resumes from an exact snapshot."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import HealthMonitor, HealthPolicy, Session
+from repro.core import EngineConfig
+from repro.data import (make_dense_classification,
+                        make_sparse_classification, registry)
+from repro.data.cache import TileCorruptionError
+from repro.resilience import (FaultInjectedIOError, FaultInjector,
+                              FaultyFeed, KernelBuildError,
+                              ResilientChunkFeed, SimulatedCrash,
+                              parse_schedule)
+
+CFG = EngineConfig.make(pods=2, lanes=2, bucket=8, chunks=4,
+                        partition="hierarchical", deterministic=True,
+                        local_solver="xla")
+RES_CFG = EngineConfig.make(pods=1, lanes=2, bucket=8, chunks=2,
+                            partition="hierarchical", deterministic=True,
+                            local_solver="xla")
+EPOCHS = 3
+KINDS = ["dense", "sparse"]
+
+
+def _maker(kind, root):
+    """Cache (re)builder for one synthetic dataset — byte-stable, so a
+    rebuild after quarantine is bitwise-identical to the original."""
+    def mk():
+        return registry.materialize(f"synthetic-{kind}", root, bucket=8,
+                                    pods=2, n=512, d=64, pad_multiple=256)
+    return mk
+
+
+def _resident_source(kind):
+    if kind == "dense":
+        X, y = make_dense_classification(n=256, d=32, seed=0)
+        return dict(data=(np.asarray(X), np.asarray(y)))
+    (idx, val), y, d = make_sparse_classification(n=256, d=64, nnz=8,
+                                                  seed=1)
+    return dict(data=((idx, val), y), d=d)
+
+
+def _fit(source, *, cfg=CFG, until=EPOCHS, **kw):
+    s = Session(source, cfg=cfg, lam=1e-3, objective="logistic", **kw)
+    res = s.fit(until=until, tol=0)
+    return s, res
+
+
+# -- fault grammar ----------------------------------------------------------
+
+def test_parse_schedule_grammar():
+    specs = parse_schedule("fetch-error@n3x2; kill@e1c2; flip-tile@t5")
+    assert [s.kind for s in specs] == ["fetch-error", "kill", "flip-tile"]
+    assert specs[0].nth == 3 and specs[0].times == 2
+    assert specs[1].epoch == 1 and specs[1].chunk == 2
+    assert specs[2].tile == 5
+    with pytest.raises(ValueError):
+        parse_schedule("melt-cpu@e1")          # unknown fault kind
+    with pytest.raises(ValueError):
+        parse_schedule("kill@q9")              # unknown site token
+
+
+def test_injector_from_env_is_none_when_unset(monkeypatch):
+    """Zero-overhead contract: no $REPRO_FAULTS means no injector, no
+    journal, and no health monitor object on a default Session."""
+    monkeypatch.delenv("REPRO_FAULTS", raising=False)
+    assert FaultInjector.from_env() is None
+    src = _resident_source("dense")
+    s = Session(src.pop("data"), cfg=RES_CFG, lam=1e-3,
+                objective="logistic", **src)
+    assert s._faults is None and s._journal is None
+
+
+# -- tile corruption: typed error, quarantine, bitwise rebuild --------------
+
+def test_tile_corruption_error_is_typed_and_localized(tmp_path):
+    cache = _maker("dense", tmp_path)()
+    FaultInjector("flip-tile@t5", seed=7).apply_disk_faults(cache.path)
+    with pytest.raises(TileCorruptionError) as ei:
+        _maker("dense", tmp_path)().verify_tiles()
+    err = ei.value
+    a = cache.arrays[err.array]
+    tile_nbytes = a.reshape((cache.meta.n_buckets,) + a.shape[2:])[0].nbytes
+    assert err.tile == 5 and err.offset == 5 * tile_nbytes
+    assert err.array and str(err.path).endswith(f"{err.array}.bin")
+    assert "quarantine" in str(err)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_corruption_quarantine_rebuild_bitwise(tmp_path, kind):
+    mk = _maker(kind, tmp_path)
+    _, ref = _fit(mk(), streamed=True)
+    FaultInjector("flip-tile@t5", seed=7).apply_disk_faults(mk().path)
+    feed = ResilientChunkFeed(mk().feed(verify=True), rebuild=mk,
+                              sleep=lambda t: None)
+    s, _ = _fit(feed)
+    assert np.array_equal(np.asarray(s.v), np.asarray(ref.v))
+    quarantined = list(tmp_path.glob(".quarantine.*"))
+    assert quarantined, "corrupt cache dir must be kept for forensics"
+    mk().verify_tiles()                        # rebuilt cache is clean
+
+
+def test_corruption_without_rebuilder_raises(tmp_path):
+    mk = _maker("dense", tmp_path)
+    cache = mk()
+    FaultInjector("flip-tile@t2", seed=7).apply_disk_faults(cache.path)
+    feed = ResilientChunkFeed(mk().feed(verify=True))   # no rebuild=
+    with pytest.raises(TileCorruptionError):
+        _fit(feed)
+
+
+# -- crash-safe epochs: kill mid-epoch / at epoch boundary, resume ----------
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_kill_and_resume_streamed_bitwise(tmp_path, kind):
+    """SIGKILL simulation between chunk 1 and 2 of epoch 1: a fresh
+    process resumes from the journal at the chunk boundary and finishes
+    bitwise-identical to the uninterrupted run."""
+    mk = _maker(kind, tmp_path / "c")
+    _, ref = _fit(mk(), streamed=True)
+    jd = tmp_path / "journal"
+    with pytest.raises(SimulatedCrash):
+        _fit(mk(), streamed=True, journal_dir=jd,
+             faults=FaultInjector("kill@e1c2"))
+    s2 = Session(mk(), cfg=CFG, lam=1e-3, objective="logistic",
+                 streamed=True, journal_dir=jd)
+    assert s2.epochs_done == 1                 # epoch 0 was committed
+    res = s2.fit(until=EPOCHS, tol=0)
+    assert np.array_equal(np.asarray(res.v), np.asarray(ref.v))
+    assert np.array_equal(np.asarray(res.alpha), np.asarray(ref.alpha))
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_kill_and_resume_resident_bitwise(tmp_path, kind):
+    """Epoch-boundary kill on the resident path: the journal's
+    committed-epoch record alone is enough to resume bitwise."""
+    src = _resident_source(kind)
+    kw = dict(cfg=RES_CFG, lam=1e-3, objective="logistic",
+              **{k: v for k, v in src.items() if k != "data"})
+    ref = Session(src["data"], **kw)
+    ref.fit(until=EPOCHS, tol=0)
+    jd = tmp_path / "journal"
+    crashing = Session(src["data"], **kw, journal_dir=jd,
+                       faults=FaultInjector("kill@e2"))
+    with pytest.raises(SimulatedCrash):
+        crashing.fit(until=EPOCHS, tol=0)
+    resumed = Session(src["data"], **kw, journal_dir=jd)
+    assert resumed.epochs_done == 2
+    resumed.fit(until=EPOCHS, tol=0)
+    assert np.array_equal(np.asarray(resumed.v), np.asarray(ref.v))
+
+
+def test_kill_resume_emits_event_log(tmp_path, fault_env):
+    """$REPRO_FAULTS end-to-end: the schedule arms from the
+    environment, and the event log is a byte-stable (timestamp-free,
+    sorted-key) JSON-lines stream the chaos job can diff."""
+    log = fault_env("kill@e1c1")
+    mk = _maker("dense", tmp_path / "c")
+    jd = tmp_path / "journal"
+    with pytest.raises(SimulatedCrash):
+        _fit(mk(), streamed=True, journal_dir=jd)
+    events = [json.loads(ln) for ln in log.read_text().splitlines()]
+    names = [e["event"] for e in events]
+    assert "journal.chunk" in names and "inject.kill" in names
+    for raw, e in zip(log.read_text().splitlines(), events):
+        assert raw == json.dumps(e, sort_keys=True)   # stable bytes
+        assert "time" not in e and "timestamp" not in e
+
+
+# -- transient I/O errors: retry with backoff -------------------------------
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_retry_after_transient_bitwise(tmp_path, kind):
+    mk = _maker(kind, tmp_path)
+    _, ref = _fit(mk(), streamed=True)
+    inj = FaultInjector("fetch-error@n3x2")
+    delays = []
+    feed = ResilientChunkFeed(FaultyFeed(mk().feed(), inj),
+                              retries=3, backoff=0.01,
+                              sleep=delays.append)
+    s, _ = _fit(feed)
+    assert np.array_equal(np.asarray(s.v), np.asarray(ref.v))
+    assert delays == [0.01, 0.02]              # capped exponential
+
+
+def test_transient_retries_exhausted_raises(tmp_path):
+    mk = _maker("dense", tmp_path)
+    inj = FaultInjector("fetch-error@n1x5")
+    feed = ResilientChunkFeed(FaultyFeed(mk().feed(), inj),
+                              retries=2, sleep=lambda t: None)
+    with pytest.raises(FaultInjectedIOError):
+        _fit(feed)
+
+
+# -- numerical health: rollback + remediate ---------------------------------
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_nan_chunk_rollback_streamed_bitwise(tmp_path, kind):
+    """A NaN-poisoned chunk trips the health guard at epoch end; it
+    rolls back to the last healthy snapshot and the retry (the fault is
+    one-shot) converges bitwise with the clean run."""
+    mk = _maker(kind, tmp_path)
+    _, ref = _fit(mk(), streamed=True)
+    monitor = HealthMonitor(HealthPolicy(retries=1))
+    inj = FaultInjector("nan-chunk@n6")
+    s, res = _fit(FaultyFeed(mk().feed(), inj), health=monitor)
+    assert np.array_equal(np.asarray(s.v), np.asarray(ref.v))
+    assert not res.diverged
+    assert monitor.trips == 1
+    assert "non-finite" in monitor.events[0]["reason"]
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_nan_epoch_rollback_resident_bitwise(kind):
+    src = _resident_source(kind)
+    kw = dict(cfg=RES_CFG, lam=1e-3, objective="logistic",
+              **{k: v for k, v in src.items() if k != "data"})
+    ref = Session(src["data"], **kw)
+    ref.fit(until=EPOCHS, tol=0)
+    monitor = HealthMonitor(HealthPolicy(retries=1))
+    s = Session(src["data"], **kw, faults=FaultInjector("nan-epoch@e1"))
+    res = s.fit(until=EPOCHS, tol=0, health=monitor)
+    assert np.array_equal(np.asarray(s.v), np.asarray(ref.v))
+    assert not res.diverged and monitor.trips == 1
+
+
+def test_health_gives_up_past_max_trips():
+    """A fault that re-fires every epoch exhausts the policy; fit
+    reports divergence instead of looping forever."""
+    src = _resident_source("dense")
+    monitor = HealthMonitor(HealthPolicy(retries=0, remedy="fallback",
+                                         max_trips=2))
+    s = Session(src["data"], cfg=RES_CFG, lam=1e-3, objective="logistic",
+                faults=FaultInjector("nan-epoch@x99"))
+    res = s.fit(until=EPOCHS, tol=0, health=monitor)
+    assert monitor.gave_up and res.diverged
+
+
+def test_health_policy_validates_remedy():
+    with pytest.raises(ValueError):
+        HealthPolicy(remedy="reboot")
+
+
+# -- kernel failures: retry, then fall back to the XLA solver ---------------
+
+def test_persistent_kernel_fail_falls_back_to_xla(tmp_path):
+    """A kernel that fails at every epoch under local_solver="pallas"
+    exhausts the retry budget; the fallback remedy reroutes to the XLA
+    solver, which is bitwise-identical under deterministic=True."""
+    mk = _maker("dense", tmp_path)
+    _, ref = _fit(mk(), streamed=True)         # xla reference
+    cfgp = EngineConfig.make(pods=2, lanes=2, bucket=8, chunks=4,
+                             partition="hierarchical", deterministic=True,
+                             local_solver="pallas")
+    monitor = HealthMonitor(HealthPolicy(retries=1))
+    s = Session(mk(), cfg=cfgp, lam=1e-3, objective="logistic",
+                streamed=True, faults=FaultInjector("kernel-fail@x99"))
+    res = s.fit(until=EPOCHS, tol=0, health=monitor)
+    assert s.spec.algo.local_solver == "xla"
+    assert not res.diverged
+    assert np.array_equal(np.asarray(s.v), np.asarray(ref.v))
+    assert any(e["action"] == "fallback:xla" for e in monitor.events)
+
+
+def test_kernel_fail_without_monitor_raises(tmp_path):
+    mk = _maker("dense", tmp_path)
+    cfgp = EngineConfig.make(pods=2, lanes=2, bucket=8, chunks=4,
+                             partition="hierarchical", deterministic=True,
+                             local_solver="pallas")
+    s = Session(mk(), cfg=cfgp, lam=1e-3, objective="logistic",
+                streamed=True, faults=FaultInjector("kernel-fail@e0"))
+    with pytest.raises(KernelBuildError):
+        s.fit(until=1, tol=0)
+
+
+# -- cache build atomicity: meta.json is the validity marker ----------------
+
+def test_interrupted_build_without_marker_is_rebuilt(tmp_path):
+    """A build killed before its final meta.json write leaves a
+    directory without the validity marker; materialize must quarantine
+    it and rebuild rather than serve half-written tiles."""
+    mk = _maker("dense", tmp_path)
+    path = mk().path
+    (path / "meta.json").unlink()              # simulate the torn build
+    cache = mk()
+    cache.verify_tiles()
+    assert (cache.path / "meta.json").exists()
+    assert list(tmp_path.glob(".quarantine.*"))
+
+
+def test_truncated_meta_marker_is_rebuilt(tmp_path):
+    mk = _maker("dense", tmp_path)
+    path = mk().path
+    full = (path / "meta.json").read_text()
+    (path / "meta.json").write_text(full[:len(full) // 2])
+    cache = mk()                               # quarantines + rebuilds
+    cache.verify_tiles()
+    assert json.loads((cache.path / "meta.json").read_text())
+
+
+def test_rebuilt_cache_is_byte_identical(tmp_path):
+    """Quarantine-and-rebuild only preserves bitwise training because
+    cache builds themselves are byte-stable; pin that property."""
+    mk = _maker("dense", tmp_path)
+    path = mk().path
+    bins = {p.name: p.read_bytes() for p in sorted(path.glob("*.bin"))}
+    (path / "meta.json").unlink()
+    rebuilt = mk().path
+    for name, blob in bins.items():
+        assert (rebuilt / name).read_bytes() == blob
