@@ -9,7 +9,8 @@ import pathlib
 DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
 
 HEADER = ["arch", "shape", "t_compute_s", "t_memory_s", "t_collective_s",
-          "bottleneck", "roofline_frac", "model_over_hlo", "method"]
+          "t_h2d_s", "bottleneck", "roofline_frac", "model_over_hlo",
+          "method"]
 
 
 def rows(mesh: str = "pod"):
@@ -23,6 +24,11 @@ def rows(mesh: str = "pod"):
             arch=rec["arch"], shape=rec["shape"],
             t_compute_s=rl["t_compute_s"], t_memory_s=rl["t_memory_s"],
             t_collective_s=rl["t_collective_s"],
+            # streamed ingest time over the host link (DESIGN.md S16),
+            # kept OUT of t_memory_s: the h2d link is ~50x slower than
+            # HBM, so folding it in would corrupt the memory-bound
+            # term.  Old dryrun records predate the field -> 0.
+            t_h2d_s=rl.get("t_h2d_s", 0.0),
             bottleneck=rl["bottleneck"],
             roofline_frac=rl["t_compute_s"] / rl["step_time_lb_s"],
             model_over_hlo=rl.get("model_over_hlo", float("nan")),

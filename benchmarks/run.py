@@ -29,7 +29,10 @@ from . import (fig1_wild_convergence, fig2_scaling_partitions,
 #     SolverPlan emitted under figures[...]["plans"]).
 # v6: resilience arm (journal + kill-and-resume recovery overhead,
 #     emitted under figures[...]["recovery"]).
-WORKLOAD_VERSION = 6
+# v7: fig4 streamed-mesh arm (resident vs MeshChunkFeed-streamed epochs:
+#     transfer-hidden fraction, ingest bytes measured + modeled) and
+#     roofline t_h2d_s column.
+WORKLOAD_VERSION = 7
 
 BENCHES = [
     ("fig1_wild_convergence", fig1_wild_convergence),
@@ -91,7 +94,9 @@ def main(argv=None) -> int:
         # per-solver throughput from the fig6 sparse xla/pallas arms
         # rides along too, so CI can watch examples/s + HBM bytes drift
         thr = [{k: r.get(k) for k in ("dataset", "solver",
-                                      "examples_per_s", "hbm_bytes_epoch")
+                                      "examples_per_s", "hbm_bytes_epoch",
+                                      "transfer_hidden_frac",
+                                      "h2d_bytes_epoch", "h2d_bytes_model")
                 if r.get(k) is not None}
                for r in rows if r.get("examples_per_s") is not None]
         if thr:

@@ -114,6 +114,7 @@ class Session:
                  = None, lam: Optional[float] = None,
                  cfg: Any = None, d: Optional[int] = None,
                  bucket: Optional[int] = None, streamed: bool = False,
+                 mesh=None,
                  cache_dir=None, data_dir=None, n: Optional[int] = None,
                  nnz_multiple: Optional[int] = None,
                  pad: bool = True, jit_step: bool = True,
@@ -123,6 +124,13 @@ class Session:
             else EngineConfig()
         self.cfg = cfg if cfg is not None else self.spec
         self.streamed = streamed
+        # `mesh=` routes the streamed loop through the real-mesh input
+        # pipeline (launch.glm.make_streamed_epoch_mesh / DESIGN.md
+        # S16): chunks land pre-sharded via double-buffered device_put
+        # instead of the stacked-sim layout.  `stream_stats` collects
+        # the last epoch's ingest-overlap metrics on that path.
+        self._mesh = mesh
+        self.stream_stats: dict[str, float] = {}
         self.cache = None
         self.feed = None
         self.solver_plan = None       # set when "auto" routes via planner
@@ -170,6 +178,11 @@ class Session:
             self._init_from_arrays(data, y, objective=objective, lam=lam,
                                    d=d, bucket=bucket, pad=pad,
                                    jit_step=jit_step)
+        if self._mesh is not None and self.feed is None:
+            raise ValueError(
+                "mesh= streams chunks onto the mesh, so it needs a "
+                "streamed source: pass streamed=True (arrays/registry/"
+                "cache) or a ChunkFeed")
         if self._journal is not None:
             # restart path: pick up the last committed epoch state, so
             # a re-constructed Session (new process after a crash)
@@ -422,7 +435,26 @@ class Session:
         """(Re)compile the epoch program from the current spec/damp —
         called at construction and by health remedies (solver reroute,
         damping) that change how an epoch runs."""
-        if self.feed is not None:
+        if self.feed is not None and self._mesh is not None:
+            from repro.launch import glm
+            dep = self.spec.deployment
+            kw: dict[str, Any] = {}
+            if self.sparse:
+                kw["feature_shard"] = dep.feature_shard
+                nnz = getattr(self.feed, "nnz", None)  # MeshChunkFeed
+                if not nnz:
+                    inner = getattr(self.feed, "feed", self.feed)
+                    fidx = getattr(inner, "idx", None)
+                    if fidx is not None:
+                        nnz = int(np.shape(fidx)[-1])
+                if nnz:
+                    kw["nnz"] = int(nnz)
+            scale = glm.scale_for_estimator(self, **kw)
+            self._epoch_fn = glm.make_streamed_epoch_mesh(
+                scale, self._mesh, self.feed, obj=self.obj,
+                journal=self._journal, damp=self._damp,
+                stats=self.stream_stats, jit_step=self._jit_step)
+        elif self.feed is not None:
             self._epoch_fn = engine.make_streamed_epoch(
                 self.obj, self.spec, self.plan, self.feed, lam=self.lam,
                 jit_step=self._jit_step, journal=self._journal,
@@ -589,6 +621,14 @@ class Session:
 
     # -- diagnostics -------------------------------------------------------
 
+    @property
+    def mesh_feed(self):
+        """The `MeshChunkFeed` driving a mesh-streamed session (h2d
+        byte/seconds counters live there); None off the mesh path."""
+        if self._mesh is None:
+            return None
+        return getattr(self._epoch_fn, "feed", None)
+
     def _streamed_primal_dual(self, gbuckets: int = 256
                               ) -> tuple[float, float]:
         """One streaming pass over the feed/cache: primal + dual sums."""
@@ -603,7 +643,14 @@ class Session:
             if self.cache is not None:
                 data, yb = src.gather_buckets(bids)
             else:
-                data, yb = src.fetch(bids)
+                # mesh feeds (possibly under a ResilientChunkFeed, whose
+                # inner feed `make_streamed_epoch_mesh` upgrades in
+                # place) expose host_fetch: raw uncompacted rows — the
+                # sliced per-lane compaction `fetch` ships is not
+                # margin-kernel shaped
+                hf = getattr(src, "host_fetch", None) or getattr(
+                    getattr(src, "feed", None), "host_fetch", None)
+                data, yb = hf(bids) if hf is not None else src.fetch(bids)
             yb = jnp.asarray(yb)
             m = margins(v, data)
             loss_sum += float(jnp.sum(self.obj.loss(m, yb)))

@@ -51,6 +51,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import time
 import warnings
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Mapping, Optional, Protocol, Union
@@ -64,6 +65,25 @@ from .config import AlgoConfig, EngineConfig, as_engine_config
 from .objectives import Objective
 
 Array = jax.Array
+
+# check_vma=False: v is *mathematically* invariant over unmentioned axes
+# (every lane adds the same reduced delta to the same replica), but the
+# static VMA tracker cannot see through the chunked carry + the int8
+# all-gather pod reduce, so we assert replication via out_specs instead.
+# Lives here (not launch/glm.py) since the mesh-streamed step below
+# needs it too; launch/glm.py re-imports it.
+try:
+    from jax import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+except (ImportError, TypeError):                        # older jax
+    from jax.experimental.shard_map import shard_map as _sm
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False)
 
 # ---------------------------------------------------------------------------
 # Worker-local data blocks
@@ -1018,6 +1038,7 @@ def run_epoch_streamed(
     v: Array,                  # (d,) shared vector, device-resident
     epoch: int,
     journal=None,              # optional resilience.EpochJournal
+    stats: Optional[dict] = None,   # out: ingest-overlap metrics
 ) -> tuple[Array, Array]:
     """One epoch where `run_epoch`'s chunked sub-epoch loop consumes
     host-resident chunks instead of a device-resident block.
@@ -1039,6 +1060,15 @@ def run_epoch_streamed(
     to an uninterrupted run (tests/test_resilience.py).  Without one,
     the loop body adds two ``is None`` checks per chunk and nothing
     else — no host sync, no checksum, zero overhead.
+
+    A ``stats`` dict collects ingest-overlap metrics for the epoch
+    (mutated in place): ``epoch_s`` wall time, ``ingest_wait_s`` the
+    time the chunk loop spent BLOCKED on the prefetch thread (host
+    gather + H2D not hidden behind compute), and
+    ``transfer_hidden_frac = 1 - ingest_wait_s/epoch_s`` — the fig4
+    streamed-mesh arm's headline number.  Passing one adds a
+    `block_until_ready` at epoch end (an epoch boundary sync the
+    benchmark wants anyway); None keeps the hot loop sync-free.
     """
     B = feed.bucket
     per_lane = plan.per_lane
@@ -1066,18 +1096,31 @@ def run_epoch_streamed(
             start, alpha, v, v_in = got
             alpha, v, v_in = (jnp.asarray(alpha), jnp.asarray(v),
                               jnp.asarray(v_in))
+    t_start = time.perf_counter()
+    wait_s = 0.0
     with ThreadPoolExecutor(max_workers=1) as ex:
         nxt = ex.submit(fetch, start)
         for c in range(start, algo.chunks):
             if journal is not None:
                 journal.pre_chunk(ep, c)
+            t0 = time.perf_counter()
             cols, data, yc = nxt.result()
+            wait_s += time.perf_counter() - t0
             if c + 1 < algo.chunks:
                 nxt = ex.submit(fetch, c + 1)
             alpha, v = step(data, yc, cols, alpha, v)
             if journal is not None:
                 journal.post_chunk(ep, c, alpha, v, v_in, algo.chunks)
-    return alpha, coll.pod_reduce(v, v_in)
+    v = coll.pod_reduce(v, v_in)
+    if stats is not None:
+        jax.block_until_ready((alpha, v))
+        wall = time.perf_counter() - t_start
+        stats.update(
+            epoch_s=wall, ingest_wait_s=wait_s,
+            chunks=algo.chunks - start,
+            transfer_hidden_frac=(max(0.0, 1.0 - wait_s / wall)
+                                  if wall > 0 else 0.0))
+    return alpha, v
 
 
 def make_streamed_epoch(obj: Objective, spec, plan, feed: ChunkFeed, *,
@@ -1110,6 +1153,477 @@ def make_streamed_epoch(obj: Objective, spec, plan, feed: ChunkFeed, *,
                                   alpha, v, epoch, journal=journal)
 
     return epoch_fn
+
+
+# ---------------------------------------------------------------------------
+# Mesh streaming: per-host input pipeline for the real mesh (DESIGN.md S16)
+# ---------------------------------------------------------------------------
+#
+# `run_epoch_streamed` above is deliberately backend-agnostic: it only
+# needs a schedule, a feed, a jitted step, and pod_replicate/pod_reduce.
+# The three classes below supply mesh-flavoured implementations of those
+# seams so the SAME chunk loop (double buffering, journal hooks, stats)
+# streams host-resident tiles onto a shard_map mesh:
+#
+#   MeshSchedule     — host mirror of the mesh's per-worker PRNG streams
+#                      (re-deal + visit order), so the host knows which
+#                      GLOBAL buckets each shard consumes each epoch.
+#   MeshChunkFeed    — host gather + `device_put` with explicit
+#                      NamedShardings (one transfer lands every shard's
+#                      slice), optionally slice-compacted per model lane.
+#   MeshStreamDriver — pod_replicate/pod_reduce over a pod-stacked v
+#                      using real collectives inside shard_map.
+#
+# plus `make_mesh_streamed_step`, the mesh twin of `make_streamed_step`.
+
+
+class MeshSchedule:
+    """Host-side mirror of the mesh epoch's bucket schedule.
+
+    The resident mesh path re-deals buckets ON DEVICE (`MeshCollectives.
+    redeal`: per-worker shuffle + tiled all_to_all over 'data') and then
+    visits them in a per-worker shuffled order.  To stream, the host
+    must know which GLOBAL bucket ids land on which worker each epoch —
+    so this class replays the exact same PRNG streams in numpy:
+
+        worker_key = fold(fold(fold(PRNGKey(seed), epoch), pod), lane)
+        re-deal perm <- fold(worker_key, 0);  visit <- fold(worker_key, 1)
+
+    (threefry is bitwise-identical host/device, so the mirror is safe),
+    applies the all_to_all index permutation to a persistent bucket
+    LAYOUT — initialized contiguous, exactly how a flat global array
+    shards under P(example_axes) — and composes re-deals epoch over
+    epoch, because the physical layout persists across epochs on the
+    resident path.  `schedule(e)` is therefore a pure function of
+    (seed, e): re-entrant resume (EpochJournal) and the streamed loop
+    replay the identical bucket order the resident mesh executes.
+
+    `lane` is counted data-major over the example axes: for replicated
+    model lanes (model carries examples) lane = data_idx * M + model_idx
+    and the re-deal exchanges within each (pod, model) column over the
+    D data lanes; for feature-sharded runs the model axis carries no
+    examples and lane = data_idx.
+
+    NOTE `core.partition.PartitionPlan` cannot be reused here: its
+    "alltoall" schedule draws from a different key chain (fold(seed,
+    round) + split), so it does NOT mirror the mesh re-deal.
+    """
+
+    def __init__(self, n_buckets: int, *, pods: int = 1, data: int = 1,
+                 model: int = 1, model_in_lanes: bool = True,
+                 seed: int = 0, redeal: bool = True,
+                 redeal_frac: float = 1.0, visit_shuffle: bool = True):
+        self.n_buckets = int(n_buckets)
+        self.pods, self.data, self.model = int(pods), int(data), int(model)
+        self.model_in_lanes = bool(model_in_lanes)
+        self.lanes = self.data * self.model if model_in_lanes else self.data
+        if self.n_buckets % (self.pods * self.lanes):
+            raise ValueError(
+                f"n_buckets={n_buckets} not divisible by "
+                f"{self.pods} pods x {self.lanes} lanes")
+        self.seed = int(seed)
+        self.redeal = bool(redeal)
+        self.redeal_frac = float(redeal_frac)
+        self.visit_shuffle = bool(visit_shuffle)
+        self._base = np.arange(self.n_buckets, dtype=np.int32).reshape(
+            self.pods, self.lanes, self.per_lane)
+        self._layouts: list[np.ndarray] = []   # post-redeal, per epoch
+
+    @property
+    def per_lane(self) -> int:
+        return self.n_buckets // (self.pods * self.lanes)
+
+    def _keys(self, epoch: int):
+        base = jax.random.fold_in(jax.random.PRNGKey(self.seed),
+                                  np.int32(epoch))
+        out = np.empty((self.pods, self.lanes), dtype=object)
+        for p in range(self.pods):
+            kp = jax.random.fold_in(base, np.int32(p))
+            for ln in range(self.lanes):
+                out[p, ln] = jax.random.fold_in(kp, np.int32(ln))
+        return out
+
+    def _perm(self, key, stream: int) -> np.ndarray:
+        return np.asarray(jax.random.permutation(
+            jax.random.fold_in(key, np.int32(stream)), self.per_lane))
+
+    def _redeal(self, layout: np.ndarray, keys) -> np.ndarray:
+        """One epoch's re-deal: mirror of MeshCollectives.redeal over
+        the 'data' axis (shuffle, exchange the first `exch` buckets via
+        the tiled all_to_all's index permutation)."""
+        D = self.data
+        nb = self.per_lane
+        if D <= 1 or self.redeal_frac <= 0:
+            return layout
+        exch = max(int(nb * self.redeal_frac) // D * D, D)
+        g = exch // D
+        out = layout.copy()
+        cols = self.model if self.model_in_lanes else 1
+        for p in range(self.pods):
+            for m in range(cols):
+                lanes = [i * cols + m for i in range(D)]
+                shuf = [out[p, ln][self._perm(keys[p, ln], 0)]
+                        for ln in lanes]
+                for j, lnj in enumerate(lanes):
+                    head = np.concatenate(
+                        [shuf[i][j * g:(j + 1) * g] for i in range(D)])
+                    out[p, lnj] = np.concatenate([head, shuf[j][exch:]])
+        return out
+
+    def layout(self, epoch: int) -> np.ndarray:
+        """(pods, lanes, per_lane) GLOBAL bucket ids each worker holds
+        AFTER epoch `epoch`'s re-deal — i.e. the physical layout the
+        resident mesh trains on during that epoch.  Tests use it to map
+        physically-permuted resident state back to global order."""
+        if not self.redeal:
+            return self._base
+        while len(self._layouts) <= epoch:
+            r = len(self._layouts)
+            prev = self._layouts[r - 1] if r else self._base
+            self._layouts.append(self._redeal(prev, self._keys(r)))
+        return self._layouts[epoch]
+
+    def schedule(self, epoch) -> np.ndarray:
+        """(pods, lanes, per_lane) bucket ids in VISIT order — the
+        `plan.schedule` contract `run_epoch_streamed` consumes."""
+        e = int(epoch)
+        lay = self.layout(e)
+        if not self.visit_shuffle:
+            return lay.copy()
+        keys = self._keys(e)
+        out = np.empty_like(lay)
+        for p in range(self.pods):
+            for ln in range(self.lanes):
+                out[p, ln] = lay[p, ln][self._perm(keys[p, ln], 1)]
+        return out
+
+
+class MeshChunkFeed:
+    """`ChunkFeed` that lands each chunk SHARDED across a mesh.
+
+    The host gathers a chunk's buckets (from a `TileCache`'s mmap'd
+    tiles or a resident host-array feed), lays the examples out in
+    worker-major order — the order a flat global array shards under
+    P(example_axes) — and `jax.device_put`s ONCE per array with an
+    explicit NamedSharding, so each device receives exactly its slice
+    (the `MpDeviceLoader`+`ShardingSpec` idiom).  Called from
+    `run_epoch_streamed`'s prefetch thread, this overlaps host gather +
+    H2D of chunk c+1 with chunk c's on-mesh compute.
+
+    Feature-sharded sparse runs (`model_lanes`/`d_loc` set) use the
+    slice-compacted feed: the host compacts each row to each model
+    lane's [m*d_loc, (m+1)*d_loc) feature slice via
+    `TileCache.slice_gather(positions=True)` and ships (M, nc, w)
+    idx/val/pos stacks sharded P('model', example_axes, ...) — each
+    lane transfers only its own slice's nonzeros (w ≈ nnz/M), cutting
+    per-lane H2D bytes ~M-fold; the mesh step reassembles exact full
+    rows on device from one model-axis all_gather (see
+    `make_mesh_streamed_step`).  The compaction width `w` is fixed at
+    construction (one scan over the nonzeros, or pass `width=`) so the
+    jitted step compiles once.
+
+    ``verify=True`` crc-checks the touched tiles per fetch (same
+    contract as `TileFeed`); `rebind(cache)` swaps in a rebuilt
+    `TileCache` after quarantine, which `ResilientChunkFeed` uses so
+    its corruption recovery preserves the mesh feed (sharding + width)
+    instead of downgrading to a plain `TileFeed`.  ``bytes_h2d`` /
+    ``fetch_s`` accumulate host-side transfer bytes and gather+put
+    seconds for the fig4 overlap metrics.
+    """
+
+    def __init__(self, source, mesh, *, ex_axes: tuple[str, ...],
+                 tp: bool = False, model_axis: Optional[str] = None,
+                 model_lanes: Optional[int] = None,
+                 d_loc: Optional[int] = None, verify: bool = False,
+                 width: Optional[int] = None, nnz_multiple: int = 8):
+        from jax.sharding import NamedSharding, PartitionSpec
+        if hasattr(source, "gather_buckets"):        # TileCache
+            self.cache, self.host = source, None
+            m = source.meta
+            self.n, self.d, self.bucket = m.n, m.d, m.bucket
+            self.sparse = m.kind == "sparse"
+            self.nnz = m.nnz if self.sparse else 0
+        else:                                        # ArrayFeed-like
+            self.cache, self.host = None, source
+            self.n, self.d = source.n, source.d
+            self.bucket, self.sparse = source.bucket, source.sparse
+            self.nnz = int(source.idx.shape[-1]) if self.sparse else 0
+        self.mesh = mesh
+        self.ex_axes = tuple(ex_axes)
+        self.verify = bool(verify)
+        self.nnz_multiple = int(nnz_multiple)
+        self.sliced = model_lanes is not None and self.sparse
+        self.model_lanes = model_lanes
+        self.d_loc = d_loc
+        if self.sliced and d_loc is None:
+            raise ValueError("slice-compacted feed needs d_loc")
+        ex = PartitionSpec(self.ex_axes)
+        self._y_s = NamedSharding(mesh, ex)
+        if self.sliced:
+            self._r_s = NamedSharding(
+                mesh, PartitionSpec(model_axis, self.ex_axes, None))
+            self.width = int(width) if width else self._scan_width()
+        elif self.sparse:
+            self._r_s = NamedSharding(
+                mesh, PartitionSpec(self.ex_axes, None))
+            self.width = None
+        else:
+            self._x_s = NamedSharding(
+                mesh, PartitionSpec(model_axis if tp else None,
+                                    self.ex_axes))
+            self.width = None
+        self.bytes_h2d = 0
+        self.fetch_s = 0.0
+        self.fetches = 0
+
+    def rebind(self, cache) -> None:
+        """Swap in a rebuilt TileCache (post-quarantine recovery)."""
+        if self.cache is None:
+            raise ValueError("rebind() only applies to cache-backed feeds")
+        self.cache = cache
+
+    def reset_stats(self) -> None:
+        self.bytes_h2d, self.fetch_s, self.fetches = 0, 0.0, 0
+
+    # -- host-side gather ------------------------------------------------
+    def _host_gather(self, bf: np.ndarray):
+        h = self.host
+        B = self.bucket
+        cols = (bf[:, None] * B
+                + np.arange(B, dtype=np.int64)).reshape(-1)
+        y = h.y[cols]
+        if self.sparse:
+            return (h.idx[cols], h.val[cols]), y
+        return np.ascontiguousarray(h.X[:, cols]), y
+
+    def _gather(self, bf: np.ndarray):
+        if self.cache is not None:
+            if self.verify:
+                self.cache.verify_tiles(bf)
+            return self.cache.gather_buckets(bf)
+        return self._host_gather(bf)
+
+    def _scan_width(self) -> int:
+        """Fixed compaction width: max in-slice nonzero count over the
+        WHOLE dataset, ceiled to the kernel lane multiple — so every
+        chunk's compacted arrays share one static shape."""
+        M, dl = self.model_lanes, self.d_loc
+        best = 1
+        if self.cache is not None:
+            idx_f = self.cache._flat("idx")
+            val_f = self.cache._flat("val")
+            nnz = idx_f.shape[-1]
+            per_tile = int(np.prod(idx_f.shape[1:]))
+            step = max(1, (1 << 22) // max(per_tile, 1))
+            for s in range(0, idx_f.shape[0], step):
+                idx = np.asarray(idx_f[s:s + step]).reshape(-1, nnz)
+                val = np.asarray(val_f[s:s + step]).reshape(-1, nnz)
+                best = max(best, self._max_count(idx, val))
+        else:
+            best = self._max_count(self.host.idx, self.host.val)
+        mult = self.nnz_multiple
+        return min(-(-best // mult) * mult, max(self.nnz, 1))
+
+    def _max_count(self, idx: np.ndarray, val: np.ndarray) -> int:
+        # keep-mask matches compact_slice_rows(positions=True): real
+        # entries plus explicit (idx!=0, val==0) zeros; (0, 0) padding
+        # is reproduced by the reassembly base and needn't travel
+        keep = (val != 0) | (idx != 0)
+        lane = idx // self.d_loc
+        best = 0
+        for m in range(self.model_lanes):
+            c = ((lane == m) & keep).sum(axis=-1)
+            best = max(best, int(c.max(initial=0)))
+        return best
+
+    def _fetch_sliced(self, bf: np.ndarray):
+        from repro.data.cache import compact_slice_rows
+        M, dl = self.model_lanes, self.d_loc
+        rows, y = self._gather(bf)
+        idx, val = rows
+        parts = []
+        for m in range(M):
+            if self.cache is not None:
+                # the per-lane slice compaction IS slice_gather
+                # (gathered= skips re-reading the tiles per lane)
+                (gi, gv, gp), _ = self.cache.slice_gather(
+                    bf, m * dl, (m + 1) * dl,
+                    nnz_multiple=self.nnz_multiple, positions=True,
+                    width=self.width, gathered=(rows, y))
+            else:
+                gi, gv, gp = compact_slice_rows(
+                    idx, val, m * dl, (m + 1) * dl,
+                    nnz_multiple=self.nnz_multiple, positions=True,
+                    width=self.width)
+            parts.append((gi, gv, gp))
+        gi = np.stack([p[0] for p in parts])
+        gv = np.stack([p[1] for p in parts])
+        gp = np.stack([p[2] for p in parts])
+        return (gi, gv, gp), y
+
+    # -- the ChunkFeed entry point ---------------------------------------
+    def fetch(self, bids: np.ndarray):
+        t0 = time.perf_counter()
+        bf = np.asarray(bids).reshape(-1)
+        nbytes = 0
+        if self.sliced:
+            (gi, gv, gp), y = self._fetch_sliced(bf)
+            nbytes += gi.nbytes + gv.nbytes + gp.nbytes
+            data = (jax.device_put(gi, self._r_s),
+                    jax.device_put(gv, self._r_s),
+                    jax.device_put(gp, self._r_s))
+        elif self.sparse:
+            (idx, val), y = self._gather(bf)
+            nbytes += idx.nbytes + val.nbytes
+            data = (jax.device_put(idx, self._r_s),
+                    jax.device_put(val, self._r_s))
+        else:
+            X, y = self._gather(bf)
+            X = np.ascontiguousarray(X)
+            nbytes += X.nbytes
+            data = jax.device_put(X, self._x_s)
+        y = np.ascontiguousarray(y)
+        nbytes += y.nbytes
+        yd = jax.device_put(y, self._y_s)
+        self.bytes_h2d += nbytes
+        self.fetch_s += time.perf_counter() - t0
+        self.fetches += 1
+        return data, yd
+
+    def host_fetch(self, bids: np.ndarray):
+        """Raw host-resident rows ``(data, y)`` for the requested
+        buckets — uncompacted, no device_put.  Diagnostics (the
+        Session's streamed gap/primal pass) use this instead of
+        `fetch`, whose sliced-feed output is a per-lane compaction
+        that plain margin kernels cannot consume."""
+        return self._gather(np.asarray(bids).reshape(-1))
+
+
+class MeshStreamDriver:
+    """The `Collectives` sliver `run_epoch_streamed` needs, for a mesh.
+
+    The streamed loop holds v pod-STACKED — (pods, d) with the leading
+    axis sharded over 'pod' — so each pod accumulates its own replica
+    across chunks exactly like `SimCollectives` does, and the final
+    cross-pod combine runs the REAL `MeshCollectives.pod_reduce`
+    (ordered gather-sum / int8 EF) inside a tiny shard_map program.
+    """
+
+    def __init__(self, mesh, coll: MeshCollectives, *, tp: bool = False):
+        from jax.sharding import NamedSharding, PartitionSpec
+        self.mesh, self.coll = mesh, coll
+        self.pods = coll._pod_size()
+        self._vdim = "model" if tp else None
+        self._vp = NamedSharding(
+            mesh, PartitionSpec(coll.pod_axis, self._vdim))
+        self._v1 = NamedSharding(mesh, PartitionSpec(self._vdim))
+        self._finish = None
+
+    def pod_replicate(self, v: Array) -> Array:
+        stacked = jnp.broadcast_to(v, (self.pods,) + v.shape)
+        return jax.device_put(stacked, self._vp)
+
+    def pod_reduce(self, v_pods: Array, v_in: Array) -> Array:
+        if self.pods == 1:
+            return v_pods[0]
+        if self._finish is None:
+            from jax.sharding import PartitionSpec
+            coll = self.coll
+            vp_spec = PartitionSpec(coll.pod_axis, self._vdim)
+
+            def finish(vp, vi):
+                return coll.pod_reduce(vp[0], vi[0])
+
+            self._finish = jax.jit(shard_map(
+                finish, self.mesh, in_specs=(vp_spec, vp_spec),
+                out_specs=PartitionSpec(self._vdim)))
+        return self._finish(v_pods, v_in)
+
+
+def make_mesh_streamed_step(mesh, coll: MeshCollectives,
+                            solver: LocalSolver, algo: AlgoConfig, *,
+                            ex_axes: tuple[str, ...], sparse: bool,
+                            tp: bool = False,
+                            slice_lanes: Optional[int] = None,
+                            model_axis: str = "model",
+                            nnz: Optional[int] = None,
+                            dv_scale: float = 1.0, jit: bool = True):
+    """Mesh twin of `make_streamed_step`: same (data, yc, cols, alpha,
+    v) -> (alpha, v) contract, but the chunk solve runs inside
+    shard_map with `MeshCollectives`, on chunk arrays `MeshChunkFeed`
+    landed pre-sharded.  alpha stays a replicated global (n,) array —
+    the gather/scatter at chunk edges reshards rows to/from the
+    example axes — and is NOT donated (same crash-recoverability
+    contract as the sim step).
+
+    Slice-compacted sparse chunks (`slice_lanes` = M model lanes) are
+    reassembled to exact full rows on device before the solver: one
+    model-axis all_gather of the (n_loc, w) idx/val/pos triple, then a
+    positional scatter into a zeros-(n_loc, nnz) base.  The compaction
+    keep-mask retains every entry that is not (idx=0, val=0) padding —
+    which is exactly what the zeros base reproduces — and kept entries
+    scatter to their original (row, position) slots, so the
+    reconstruction is bitwise-exact (explicit zero-value entries from
+    `zero_duplicates` included) and the downstream solver sees the
+    identical arrays the resident path replicates.  The redundant
+    bytes move from the host link onto ICI, where the sharded solver
+    already pays a per-bucket working-set exchange (DESIGN.md S12).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    e_spec = PartitionSpec(ex_axes)
+    vdim = "model" if tp else None
+    vp_spec = PartitionSpec(coll.pod_axis, vdim)
+    if sparse:
+        if slice_lanes:
+            if nnz is None:
+                raise ValueError("slice-compacted step needs nnz")
+            r_spec = PartitionSpec(model_axis, ex_axes, None)
+            data_specs = (r_spec, r_spec, r_spec)
+        else:
+            r_spec = PartitionSpec(ex_axes, None)
+            data_specs = (r_spec, r_spec)
+    else:
+        data_specs = PartitionSpec(vdim, ex_axes)
+
+    def body(data, yc, ac, vp):
+        v_c = vp[0]
+        if sparse and slice_lanes:
+            ci, cv, cp = (t[0] for t in data)     # (n_loc, w) own slice
+            # audit: collective-ok pure data movement (slice reassembly)
+            gi = jax.lax.all_gather(ci, model_axis)
+            gv = jax.lax.all_gather(cv, model_axis)  # audit: collective-ok
+            gp = jax.lax.all_gather(cp, model_axis)  # audit: collective-ok
+            n_loc = ci.shape[0]
+            rows = jnp.broadcast_to(
+                jnp.arange(n_loc, dtype=jnp.int32)[None, :, None],
+                gp.shape)
+            # pad slots carry pos=nnz -> dropped; kept (row, pos) pairs
+            # are unique, so the scatter is order-independent
+            full_i = jnp.zeros((n_loc, nnz), jnp.int32) \
+                .at[rows, gp].set(gi, mode="drop")
+            full_v = jnp.zeros((n_loc, nnz), jnp.float32) \
+                .at[rows, gp].set(gv, mode="drop")
+            data = (full_i, full_v)
+        a_new, v_new = _apply_chunk(coll, solver, algo, data, yc, ac,
+                                    v_c, dv_scale=dv_scale)
+        return a_new, v_new[None]
+
+    inner = shard_map(body, mesh,
+                      in_specs=(data_specs, e_spec, e_spec, vp_spec),
+                      out_specs=(e_spec, vp_spec))
+    a_rep = NamedSharding(mesh, PartitionSpec(None))
+    a_ex = NamedSharding(mesh, e_spec)
+
+    def step(data, yc, cols, a, v_c):
+        colsf = cols.reshape(-1)
+        ac = jax.lax.with_sharding_constraint(a[colsf], a_ex)
+        a_new, v_c = inner(data, yc, ac, v_c)
+        a = jax.lax.with_sharding_constraint(
+            a.at[colsf].set(a_new), a_rep)
+        return a, v_c
+
+    return jax.jit(step) if jit else step
 
 
 # ---------------------------------------------------------------------------

@@ -58,11 +58,11 @@ import warnings
 from typing import Callable, Optional
 
 __all__ = [
-    "PLAN_VERSION", "WorkloadSignature", "Topology", "SolverPlan",
-    "plan_mode", "static_plan", "candidate_plans", "plan_cost",
-    "search_plans", "probe_plans", "resolve_plan", "plan_cache_dir",
-    "load_cached_plan", "store_plan", "route_sparse", "route_dense",
-    "feature_shard_default",
+    "PLAN_VERSION", "H2D_BW", "WorkloadSignature", "Topology",
+    "SolverPlan", "plan_mode", "static_plan", "candidate_plans",
+    "plan_cost", "search_plans", "probe_plans", "resolve_plan",
+    "plan_cache_dir", "load_cached_plan", "store_plan", "route_sparse",
+    "route_dense", "feature_shard_default", "streamed_transfer_bytes",
 ]
 
 #: Bump when the plan schema, the search space, or the cost model
@@ -88,6 +88,20 @@ CHUNK_CANDIDATES = (1, 2, 4, 8)
 CONV_BUCKET_COST = 0.02       # per doubling of B above 8
 CONV_SYNC_COST = 0.10         # x (workers-1)/workers / chunks
 
+#: Host->device link bandwidth (bytes/s) used to weigh streamed-ingest
+#: transfer bytes against HBM traffic in `plan_cost` and to turn
+#: `streamed_transfer_bytes` into seconds in the roofline table.  A
+#: PCIe-class figure, deliberately conservative: TPU hosts feed chips
+#: over PCIe, ~50x slower than HBM, which is exactly why streamed plans
+#: must score ingest bytes separately from on-chip traffic.  The ONE
+#: definition — `launch/mesh.py` and the benchmarks re-export it.
+H2D_BW = 16e9
+
+#: HBM bandwidth assumed by the cost model's streamed-ingest weighting
+#: (matches `launch/mesh.py`'s roofline constant for TPU v5p-class
+#: chips; only the RATIO to H2D_BW enters the score).
+_HBM_BW = 819e9
+
 
 def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
@@ -106,6 +120,10 @@ class WorkloadSignature:
     optional observed nonzero fraction (informational — feasibility
     only depends on the padded width).  ``name`` carries the registry
     name when known so cached plans are human-findable on disk.
+    ``streamed`` marks out-of-core workloads whose chunks arrive over
+    the host link each epoch: `plan_cost` then weighs the per-epoch
+    H2D bytes (HBM-equivalent via the bandwidth ratio) so geometry
+    choices see the ingest cost; resident workloads score unchanged.
     """
     n: int
     d: int
@@ -114,11 +132,18 @@ class WorkloadSignature:
     dtype_bytes: int = 4
     name: str = ""
     density: float = 0.0
+    streamed: bool = False
 
     def fingerprint(self) -> str:
-        """Stable hash of the plan-relevant fields (n/d/nnz/kind)."""
+        """Stable hash of the plan-relevant fields (n/d/nnz/kind).
+
+        ``streamed`` joins the key only when set, so every resident
+        fingerprint (and its cached plans) is byte-identical to
+        pre-streaming versions.
+        """
         key = (f"{self.name}|n{self.n}|d{self.d}|z{self.nnz}"
-               f"|s{int(self.sparse)}|b{self.dtype_bytes}")
+               f"|s{int(self.sparse)}|b{self.dtype_bytes}"
+               + ("|st1" if self.streamed else ""))
         return hashlib.sha1(key.encode()).hexdigest()[:12]
 
 
@@ -429,6 +454,43 @@ def candidate_plans(sig: WorkloadSignature, topo: Topology, *,
     return out
 
 
+def streamed_transfer_bytes(sig: WorkloadSignature, topo: Topology,
+                            plan: SolverPlan) -> float:
+    """Modeled host->device bytes per device per streamed epoch.
+
+    The ONE h2d byte model (DESIGN.md S16): `plan_cost`'s streamed
+    score term, `launch/glm.py glm_analytic(streamed=True)`, and the
+    fig4/roofline benchmark figures all report this quantity, so the
+    planner and the bench artifacts can never disagree about what
+    "ingest bytes" means.  Mirrors what `engine.MeshChunkFeed`
+    actually ships:
+
+      dense replicated   n_loc * d * 4            (each worker's X cols)
+      dense TP           n_loc * d_loc * 4        (device_put slices rows)
+      sparse replicated  n_loc * nnz * 8          (idx + val, full rows)
+      sparse sharded     n_loc * w * 12           (slice-compacted
+                         idx/val/pos, w ~= the per-lane share of the
+                         row width ceiled to the lane multiple — the
+                         ~M-fold per-lane saving; the real feed's w is
+                         data-dependent, this is the uniform estimate)
+
+    plus 4 bytes/example of labels everywhere.
+    """
+    n_loc = max(sig.n // max(topo.workers, 1), 1)
+    y_bytes = n_loc * 4
+    if sig.sparse:
+        nnz = max(_effective_nnz(sig, plan.nnz_multiple), 1)
+        if plan.feature_shard and topo.model_lanes > 1:
+            mult = plan.nnz_multiple or 8
+            w = min(_round_up(-(-nnz // topo.model_lanes), mult), nnz)
+            return float(n_loc * w * 12 + y_bytes)
+        return float(n_loc * nnz * 8 + y_bytes)
+    d_loc = sig.d
+    if plan.feature_shard and topo.model_lanes > 1:
+        d_loc = -(-sig.d // topo.model_lanes)
+    return float(n_loc * d_loc * sig.dtype_bytes + y_bytes)
+
+
 def plan_cost(sig: WorkloadSignature, topo: Topology,
               plan: SolverPlan) -> float:
     """Analytic score: modeled HBM bytes per EFFECTIVE epoch, per device.
@@ -471,6 +533,12 @@ def plan_cost(sig: WorkloadSignature, topo: Topology,
             # the scan re-touches v per bucket (Gram + margin carry)
             traffic = data + max(n_loc // B, 1) * d_loc \
                 * sig.dtype_bytes * 2 + sync
+    if sig.streamed:
+        # out-of-core: every epoch re-ships the chunks over the host
+        # link — score those bytes at their HBM-equivalent weight so a
+        # streamed plan's geometry sees the ~50x slower ingest lane
+        traffic += streamed_transfer_bytes(sig, topo, plan) \
+            * (_HBM_BW / H2D_BW)
     conv = 1.0 + CONV_BUCKET_COST * max(math.log2(max(B, 8) / 8), 0.0)
     W = topo.workers
     if W > 1:

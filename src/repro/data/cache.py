@@ -44,7 +44,8 @@ import numpy as np
 __all__ = [
     "CACHE_MAGIC", "CACHE_VERSION", "CacheMeta", "TileCache",
     "TileCorruptionError",
-    "ArrayFeed", "TileFeed", "build_cache", "open_cache", "pad_examples",
+    "ArrayFeed", "TileFeed", "build_cache", "compact_slice_rows",
+    "open_cache", "pad_examples",
 ]
 
 CACHE_MAGIC = "repro-tile-cache"
@@ -94,6 +95,76 @@ class TileCorruptionError(ValueError):
 
 def _ceil_to(x: int, m: int) -> int:
     return -(-x // m) * m
+
+
+def compact_slice_rows(idx: np.ndarray, val: np.ndarray, lo: int,
+                       hi: int, *, nnz_multiple: int = 8,
+                       positions: bool = False,
+                       width: int | None = None):
+    """Compact padded-CSR rows to the entries in feature slice [lo, hi).
+
+    The host half of the slice-compacted streamed feed (DESIGN.md
+    S12/S16), shared by `TileCache.slice_gather` and the mesh feed's
+    array-backed path.  Entries are kept IN ROW ORDER (stable
+    left-compaction — the kernels' bitwise contract depends on
+    within-row summation order) and right-padded to a common width
+    ``w``: the max kept count ceiled to ``nnz_multiple``, or exactly
+    ``width`` when given (so streamed chunks share one static shape;
+    raises if a row overflows it).
+
+    Two modes:
+
+      * ``positions=False`` (default): keep nonzeros with
+        ``lo <= idx < hi``, REBASE ids to slice-local coordinates
+        (idx - lo).  Returns ``(idx_loc, val_loc)`` — the sharded
+        kernels' slice-local layout.
+      * ``positions=True``: the transfer format for exact on-device
+        row reassembly.  Keeps every in-slice entry that is not
+        (idx=0, val=0) padding — including explicit zero-VALUE entries
+        (`formats.zero_duplicates` products), which a reassembled row
+        must reproduce — and returns ``(idx, val, pos)`` with GLOBAL
+        ids plus each entry's original within-row position; pad slots
+        carry the sentinel ``pos = nnz`` so a `mode="drop"` scatter
+        into a zeros base rebuilds the original row bitwise.
+
+    All outputs are (*lead, w): idx/pos int32, val float32.
+    """
+    if not 0 <= lo < hi:
+        raise ValueError(f"bad feature slice [{lo}, {hi})")
+    in_slice = (idx >= lo) & (idx < hi)
+    own = in_slice & (((val != 0) | (idx != 0)) if positions
+                      else (val != 0))
+    # stable left-compaction: sort each row by (not owned) so owned
+    # entries keep their relative order
+    order = np.argsort(~own, axis=-1, kind="stable")
+    idx_s = np.take_along_axis(idx, order, axis=-1)
+    val_s = np.take_along_axis(val, order, axis=-1)
+    own_s = np.take_along_axis(own, order, axis=-1)
+    need = max(int(own.sum(axis=-1).max(initial=0)), 1)
+    if width is None:
+        w = _ceil_to(need, nnz_multiple)
+    else:
+        w = int(width)
+        if need > w:
+            raise ValueError(
+                f"width={w} too narrow: a row holds {need} entries "
+                f"in slice [{lo}, {hi})")
+    nnz = idx.shape[-1]
+    val_c = np.where(own_s, val_s, 0.0).astype(np.float32)
+    if positions:
+        idx_c = np.where(own_s, idx_s, 0).astype(np.int32)
+        pos = np.where(own_s, order, nnz).astype(np.int32)
+        outs = [idx_c, val_c, pos]
+        fills = [0, 0.0, nnz]     # pad slots keep the drop sentinel
+    else:
+        idx_c = np.where(own_s, idx_s - lo, 0).astype(np.int32)
+        outs = [idx_c, val_c]
+        fills = [0, 0.0]
+    if w > nnz:                   # raw caches with unaligned nnz
+        pad = [(0, 0)] * (idx_c.ndim - 1) + [(0, w - nnz)]
+        outs = [np.pad(o, pad, constant_values=f)
+                for o, f in zip(outs, fills)]
+    return tuple(np.ascontiguousarray(o[..., :w]) for o in outs)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -372,44 +443,36 @@ class TileCache:
         return (idx, val), y
 
     def slice_gather(self, bids: np.ndarray, lo: int, hi: int, *,
-                     nnz_multiple: int = 8):
+                     nnz_multiple: int = 8, positions: bool = False,
+                     width: int | None = None, gathered=None):
         """Gather sparse bucket tiles compacted to a feature slice [lo, hi).
 
         Building block for streamed feature-sharded feeds (DESIGN.md
-        S12): a model-axis lane that owns rows [lo, hi) of the shared
-        vector only needs the nonzeros landing in its slice.  Entries
-        with ``lo <= idx < hi`` are kept in row order, rebased to
-        slice-local coordinates (idx - lo), and right-padded with inert
-        idx=0/val=0 columns to a common width ceiled to
-        ``nnz_multiple`` (the sparse Pallas kernels' lane alignment).
-        Returns ``((idx_loc, val_loc), y)`` with idx/val shaped
-        (*lead, nb*B, w).  Not wired into training yet — the in-memory
-        sharded path reads full rows and masks inside the gather
-        kernel instead (kernels/sdca_sparse_bucket.py).
+        S12/S16): a model-axis lane that owns rows [lo, hi) of the
+        shared vector only needs the nonzeros landing in its slice.
+        Compaction semantics (row-order preserved, padded to a common
+        width) live in `compact_slice_rows` — ``positions``/``width``
+        pass through: the default mode returns slice-LOCAL
+        ``((idx_loc, val_loc), y)``, while ``positions=True`` returns
+        the mesh transfer format ``((idx, val, pos), y)`` with global
+        ids + original within-row positions, which
+        `engine.MeshChunkFeed` ships per model lane and the mesh step
+        scatters back into exact full rows (the per-lane
+        slice-compacted feed — ~M-fold fewer per-lane H2D bytes).
+
+        ``gathered`` short-circuits the tile read with the result of a
+        prior ``gather_buckets(bids)`` call, so a feed compacting the
+        same chunk for M lanes reads the mmap once.
         """
         m = self.meta
         if m.kind != "sparse":
             raise ValueError("slice_gather is sparse-only")
-        if not 0 <= lo < hi:
-            raise ValueError(f"bad feature slice [{lo}, {hi})")
-        (idx, val), y = self.gather_buckets(bids)
-        own = (idx >= lo) & (idx < hi) & (val != 0)
-        # stable left-compaction: sort each row by (not owned) so owned
-        # entries keep their relative order — the kernel's bitwise
-        # contract depends on within-row summation order.
-        order = np.argsort(~own, axis=-1, kind="stable")
-        idx_s = np.take_along_axis(idx, order, axis=-1)
-        val_s = np.take_along_axis(val, order, axis=-1)
-        own_s = np.take_along_axis(own, order, axis=-1)
-        w = _ceil_to(max(int(own.sum(axis=-1).max(initial=0)), 1),
-                     nnz_multiple)
-        idx_s = np.where(own_s, idx_s - lo, 0).astype(np.int32)
-        val_s = np.where(own_s, val_s, 0.0).astype(np.float32)
-        if w > idx_s.shape[-1]:       # raw caches with unaligned nnz
-            pad = [(0, 0)] * (idx_s.ndim - 1) + [(0, w - idx_s.shape[-1])]
-            idx_s, val_s = np.pad(idx_s, pad), np.pad(val_s, pad)
-        return ((np.ascontiguousarray(idx_s[..., :w]),
-                 np.ascontiguousarray(val_s[..., :w])), y)
+        (idx, val), y = (gathered if gathered is not None
+                         else self.gather_buckets(bids))
+        out = compact_slice_rows(idx, val, lo, hi,
+                                 nnz_multiple=nnz_multiple,
+                                 positions=positions, width=width)
+        return out, y
 
     def feed(self, *, verify: bool = False) -> "TileFeed":
         return TileFeed(self, verify=verify)

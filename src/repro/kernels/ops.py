@@ -130,7 +130,7 @@ def plan_solver(n: int, d: int, *, nnz: int = 0, sparse: bool = False,
                 name: str = "", bucket: int | None = None,
                 chunks: int | None = None,
                 nnz_multiple: int | None = None, model_lanes: int = 1,
-                cache_dir=None, probe_fn=None):
+                streamed: bool = False, cache_dir=None, probe_fn=None):
     """System-aware geometry + route for a workload: -> `SolverPlan`.
 
     The kernels-side door into `core.planner` (DESIGN.md S13): builds
@@ -143,10 +143,17 @@ def plan_solver(n: int, d: int, *, nnz: int = 0, sparse: bool = False,
     every emitted plan passes the misfit predicates above (the PR-4
     never-regress contract; any planner failure degrades warn-and-safe
     to the static resolution).
+
+    ``streamed=True`` marks the workload as mesh-streamed (DESIGN.md
+    S16): plan scoring adds the host->device ingest term
+    (`planner.streamed_transfer_bytes` over the slow H2D link) and the
+    disk-cache fingerprint gains a ``|st1`` suffix so streamed and
+    resident plans never collide.
     """
     from repro.core import planner
     sig = planner.WorkloadSignature(n=int(n), d=int(d), nnz=int(nnz),
-                                    sparse=bool(sparse), name=name)
+                                    sparse=bool(sparse), name=name,
+                                    streamed=bool(streamed))
     topo = planner.Topology.detect(model_lanes=model_lanes)
     return planner.resolve_plan(sig, topo, bucket=bucket, chunks=chunks,
                                 nnz_multiple=nnz_multiple,

@@ -34,7 +34,7 @@ from repro.launch import steps as steps_lib
 from repro.launch.counting import counting_cost
 from repro.launch.hlo_analysis import (Roofline, analyze,
                                        memory_analysis_dict)
-from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS,
+from repro.launch.mesh import (H2D_BW, HBM_BW, ICI_BW, PEAK_FLOPS,
                                make_production_mesh, mesh_chips)
 from repro.launch.specs import SHAPES, applicable, input_specs
 
@@ -129,8 +129,13 @@ def run_cell(arch: str, shape_name: str, mesh_name: str,
             # counting pass (roofline of record): single-pod mesh only
             if counting and mesh_name == "pod":
                 if arch.startswith("glm-"):
+                    # streamed=True adds the "h2d bytes" entry: ingest
+                    # over the slow host link, reported as its own
+                    # t_h2d_s term below — NOT folded into hbm_bytes,
+                    # which would corrupt the memory-bound roofline
                     cnt = glm_launch.glm_analytic(
-                        glm_launch.GLM_CONFIGS[arch], mesh)
+                        glm_launch.GLM_CONFIGS[arch], mesh,
+                        streamed=True)
                 else:
                     cfg = get_config(arch)
                     shape = SHAPES[shape_name]
@@ -150,6 +155,9 @@ def run_cell(arch: str, shape_name: str, mesh_name: str,
                       else model_flops(get_config(arch),
                                        SHAPES[shape_name]) / chips)
                 rec["roofline"] = rl.as_dict()
+                if "h2d bytes" in cnt:
+                    rec["roofline"]["t_h2d_s"] = (
+                        cnt["h2d bytes"] / H2D_BW)
                 rec["roofline"]["model_flops_per_dev"] = mf
                 rec["roofline"]["model_over_hlo"] = (
                     mf / rl.flops if rl.flops else float("nan"))

@@ -47,22 +47,10 @@ from repro.core import engine
 from repro.core.config import AlgoConfig, DeploymentConfig, EngineConfig
 from repro.core.objectives import LOGISTIC, Objective
 
-# check_vma=False: v is *mathematically* invariant over unmentioned axes
-# (every lane adds the same reduced delta to the same replica), but the
-# static VMA tracker cannot see through the chunked carry + the int8
-# all-gather pod reduce, so we assert replication via out_specs instead.
-try:
-    from jax import shard_map as _shard_map
-
-    def shard_map(f, mesh, in_specs, out_specs):
-        return _shard_map(f, mesh=mesh, in_specs=in_specs,
-                          out_specs=out_specs, check_vma=False)
-except (ImportError, TypeError):                        # older jax
-    from jax.experimental.shard_map import shard_map as _sm
-
-    def shard_map(f, mesh, in_specs, out_specs):
-        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                   check_rep=False)
+# The version-compat shard_map wrapper (check_vma/check_rep off — see
+# the note in core/engine.py) moved into the engine with the streamed
+# mesh path; re-exported here for existing importers.
+from repro.core.engine import shard_map  # noqa: F401  (re-export)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -390,6 +378,140 @@ def lower_glm(arch: str, mesh):
 
 
 # ---------------------------------------------------------------------------
+# Streamed epochs on the mesh (DESIGN.md S16)
+# ---------------------------------------------------------------------------
+
+
+def _as_mesh_feed(source, mesh, *, ex_axes, tp, model_axis, model_lanes,
+                  d_loc, verify, width) -> engine.MeshChunkFeed:
+    """Coerce any streamable source into a mesh-sharded chunk feed.
+
+    Accepts a `TileCache`, a `TileFeed` (its verify flag carries over),
+    an `ArrayFeed`-style host-array holder, a ready `MeshChunkFeed`, or
+    a `ResilientChunkFeed` wrapping any of those — in the resilient
+    case the INNER feed is upgraded in place, so retry/quarantine/
+    rebuild semantics keep guarding the mesh path (`rebind` keeps the
+    sharded feed alive across a cache rebuild).
+    """
+    from repro.data.cache import TileCache, TileFeed
+    from repro.resilience.feed import ResilientChunkFeed
+
+    def wrap(src, v):
+        return engine.MeshChunkFeed(
+            src, mesh, ex_axes=ex_axes, tp=tp, model_axis=model_axis,
+            model_lanes=model_lanes, d_loc=d_loc, verify=v, width=width)
+
+    if isinstance(source, engine.MeshChunkFeed):
+        return source
+    if isinstance(source, ResilientChunkFeed):
+        inner = source.feed
+        if not isinstance(inner, engine.MeshChunkFeed):
+            if isinstance(inner, TileFeed):
+                source.feed = wrap(inner.cache, verify or inner.verify)
+            else:
+                source.feed = wrap(inner, verify)
+        return source
+    if isinstance(source, TileCache):
+        return wrap(source, verify)
+    if isinstance(source, TileFeed):
+        return wrap(source.cache, verify or source.verify)
+    if hasattr(source, "y") and (hasattr(source, "X")
+                                 or hasattr(source, "idx")):
+        return wrap(source, verify)
+    raise TypeError(
+        f"cannot stream a {type(source).__name__} onto a mesh — pass a "
+        f"TileCache, TileFeed, ArrayFeed, MeshChunkFeed, or a "
+        f"ResilientChunkFeed wrapping one")
+
+
+def make_streamed_epoch_mesh(scale: GLMScale, mesh, source,
+                             obj: Objective = LOGISTIC, *,
+                             interpret: bool | None = None,
+                             journal=None, verify: bool = False,
+                             width: int | None = None,
+                             damp: float = 1.0, stats: dict | None = None,
+                             jit_step: bool = True):
+    """-> epoch_fn(alpha, v, epoch) streaming `source` onto the mesh.
+
+    The mesh twin of `engine.make_streamed_epoch`: the SAME chunk loop
+    (`run_epoch_streamed` — double buffering, journal hooks, stats)
+    drives a shard_map'd chunk step, with `engine.MeshSchedule`
+    mirroring the resident mesh's re-deal + visit PRNG streams on the
+    host and `engine.MeshChunkFeed` landing each chunk pre-sharded.
+    Under ``deterministic=True`` the result is bitwise-identical to
+    resident mesh training (`make_dense_epoch`/`make_sparse_epoch`) on
+    the same (seed, epoch) — pinned by tests/test_mesh_stream.py —
+    while only ever holding `chunks`-th of the examples on device.
+
+    Feature-sharded sparse scales stream slice-compacted per-lane
+    feeds through `TileCache.slice_gather` (each model lane transfers
+    only its d/M feature slice, ~M-fold fewer per-lane H2D bytes; the
+    step reassembles exact rows on device).  `alpha` and `v` follow
+    the global-array convention of the streamed sim path: alpha (n,)
+    replicated, v (d,) — P('model')-sharded for dense TP.
+
+    ``journal`` threads an `EpochJournal` (chunk-cursor crash resume,
+    bitwise replay); ``stats`` a dict collecting the epoch's ingest
+    overlap metrics; ``damp`` the health guard's dv_scale multiplier;
+    ``verify``/``width`` forward to the feed.  The returned closure
+    exposes ``.feed`` and ``.schedule``.
+    """
+    ex_axes, _, _, tp = _axes(mesh, scale)
+    W = _worker_count(mesh, scale)
+    spec = scale.engine_config(mesh)
+    coll = _collectives(mesh, scale)
+    sparse = scale.kind == "sparse"
+    sparse_tp = sparse and scale.feature_shard \
+        and "model" in mesh.axis_names
+    model_axis = "model" if (tp or sparse_tp) else None
+    model_lanes = mesh.shape["model"] if sparse_tp else None
+    d_loc = None
+    if sparse_tp:
+        from repro.kernels import ops as kops
+        d_loc = kops.sparse_slice_width(scale.d, model_lanes)
+    feed = _as_mesh_feed(source, mesh, ex_axes=ex_axes, tp=tp,
+                         model_axis=model_axis, model_lanes=model_lanes,
+                         d_loc=d_loc, verify=verify, width=width)
+    if feed.n != scale.n or feed.bucket != scale.bucket:
+        raise ValueError(
+            f"feed shape mismatch: feed has n={feed.n} bucket="
+            f"{feed.bucket}, scale wants n={scale.n} bucket="
+            f"{scale.bucket}")
+    cache_backed = getattr(feed, "cache", None) is not None
+    solver = engine.make_local_solver(
+        scale.local_solver, obj, scale.lam * scale.n,
+        spec.sigma_prime(W), bucket=scale.bucket, sparse=sparse,
+        model_axis=model_axis,
+        model_lanes=model_lanes, interpret=interpret,
+        source=("tile cache (mesh-streamed)" if cache_backed
+                else "array feed (mesh-streamed)"))
+    dv_scale = (1.0 / W if scale.aggregation == "averaging"
+                else 1.0) * damp
+    step = engine.make_mesh_streamed_step(
+        mesh, coll, solver, spec.algo, ex_axes=ex_axes, sparse=sparse,
+        tp=tp, slice_lanes=model_lanes, model_axis="model",
+        nnz=(feed.nnz if sparse else None), dv_scale=dv_scale,
+        jit=jit_step)
+    sched = engine.MeshSchedule(
+        scale.n // scale.bucket, pods=mesh.shape.get("pod", 1),
+        data=mesh.shape.get("data", 1),
+        model=mesh.shape.get("model", 1),
+        model_in_lanes=("model" in ex_axes), seed=scale.seed,
+        redeal=(scale.partition != "static"),
+        redeal_frac=scale.redeal_frac)
+    driver = engine.MeshStreamDriver(mesh, coll, tp=tp)
+
+    def epoch_fn(alpha, v, epoch):
+        return engine.run_epoch_streamed(
+            driver, feed, step, sched, spec.algo, alpha, v, epoch,
+            journal=journal, stats=stats)
+
+    epoch_fn.feed = feed
+    epoch_fn.schedule = sched
+    return epoch_fn
+
+
+# ---------------------------------------------------------------------------
 # Analytic per-epoch cost (GLM epochs scan coordinates inside while loops,
 # which XLA:CPU's cost_analysis counts once — see counting.py; the closed
 # form below is exact for this algorithm and is used for the roofline)
@@ -398,8 +520,15 @@ def lower_glm(arch: str, mesh):
 _BISECT_FLOPS = 40 * 12       # logistic delta: 40 bisection iters
 
 
-def glm_analytic(scale: GLMScale, mesh) -> dict:
-    """Per-device per-epoch {flops, bytes accessed, coll} estimates."""
+def glm_analytic(scale: GLMScale, mesh, *, streamed: bool = False) -> dict:
+    """Per-device per-epoch {flops, bytes accessed, coll} estimates.
+
+    ``streamed=True`` adds an "h2d bytes" entry — the host->device
+    ingest bytes a `MeshChunkFeed` ships per device-epoch, taken from
+    `core.planner.streamed_transfer_bytes` (the one h2d model) and
+    reported SEPARATELY from HBM traffic: the host link is ~50x slower
+    than HBM, so folding ingest into "bytes accessed" would corrupt
+    the roofline's memory-bound term."""
     W = _worker_count(mesh, scale)
     ex_axes, sync_axes, has_pod, tp = _axes(mesh, scale)
     n_local = scale.n // W
@@ -437,8 +566,26 @@ def glm_analytic(scale: GLMScale, mesh) -> dict:
     if has_pod:
         coll += (scale.d if scale.kind == "sparse" else d_loc) * 1 * \
             mesh.shape.get("pod", 1)               # int8 payload gather
-    return {"flops": float(flops), "bytes accessed": float(bytes_acc),
-            "coll": float(coll), "method": "analytic-closed-form"}
+    out = {"flops": float(flops), "bytes accessed": float(bytes_acc),
+           "coll": float(coll), "method": "analytic-closed-form"}
+    if streamed:
+        from repro.core import planner
+        pods = mesh.shape.get("pod", 1)
+        topo = planner.Topology(
+            backend="tpu", device_count=mesh.size, pods=pods,
+            lanes=W // pods,
+            model_lanes=(mesh.shape.get("model", 1)
+                         if scale.feature_shard else 1))
+        sig = planner.WorkloadSignature(
+            n=scale.n, d=scale.d, nnz=scale.nnz,
+            sparse=scale.kind == "sparse", streamed=True)
+        plan = planner.SolverPlan(
+            solver="xla", route="xla", bucket=scale.bucket,
+            chunks=scale.chunks, nnz_multiple=8,
+            feature_shard=scale.feature_shard)
+        out["h2d bytes"] = planner.streamed_transfer_bytes(
+            sig, topo, plan)
+    return out
 
 
 def glm_model_flops(scale: GLMScale, mesh) -> float:

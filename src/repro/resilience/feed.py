@@ -122,9 +122,16 @@ class ResilientChunkFeed:
                 "recover.quarantine", path=str(p), array=err.array,
                 tile=err.tile, offset=err.offset)
         new = self.rebuild()
-        if hasattr(new, "feed"):          # TileCache -> its ChunkFeed
-            new = new.feed(verify=getattr(self.feed, "verify", False))
-        self.feed = new
+        if hasattr(self.feed, "rebind") and hasattr(new, "gather_buckets"):
+            # mesh-sharded feeds (engine.MeshChunkFeed) survive the
+            # rebuild: swap only the backing cache so the explicit
+            # shardings + compaction width stay intact — downgrading to
+            # a plain TileFeed would break the mesh step's layout
+            self.feed.rebind(new)
+        else:
+            if hasattr(new, "feed"):      # TileCache -> its ChunkFeed
+                new = new.feed(verify=getattr(self.feed, "verify", False))
+            self.feed = new
         faultinject.log_event("recover.rebuilt", array=err.array,
                               tile=err.tile)
 
